@@ -1,0 +1,65 @@
+"""Paper §3.3 analytic model — exact reproduction of Figure 2.
+
+FSA:  memory = d·N·(6h + 2h_K)·(1+T) bytes (2B/elem folded into constants
+      per the paper's convention);  FLOPs = d·N·B_K·T·(4h + 2h_K)
+NSA:  memory = 2·d·h_K·N·(B_K·T + g + 8);   FLOPs = 32·d·h_K·N·B_K·T
+
+Validation targets from the paper (g=4, B_K=64, T=16):
+  memory ratio FSA/NSA = 21.3%,  FLOPs ratio = 56.2%.
+"""
+from __future__ import annotations
+
+
+def fsa_memory_bytes(d, n, h, h_k, t):
+    return d * n * (6 * h + 2 * h_k) * (1 + t)
+
+
+def fsa_flops(d, n, h, h_k, b_k, t):
+    return d * n * b_k * t * (4 * h + 2 * h_k)
+
+
+def nsa_memory_bytes(d, n, h, h_k, b_k, t):
+    g = h // h_k
+    return 2 * d * h_k * n * (b_k * t + g + 8)
+
+
+def nsa_flops(d, n, h, h_k, b_k, t):
+    return 32 * d * h_k * n * b_k * t
+
+
+def ratios(g, b_k, t, d=128, n=65536, h_k=4):
+    h = g * h_k
+    mem = fsa_memory_bytes(d, n, h, h_k, t) / nsa_memory_bytes(d, n, h, h_k, b_k, t)
+    fl = fsa_flops(d, n, h, h_k, b_k, t) / nsa_flops(d, n, h, h_k, b_k, t)
+    return mem, fl
+
+
+def figure2_table():
+    rows = []
+    for b_k, t in ((64, 16), (128, 8)):
+        for g in (1, 2, 4, 8, 16):
+            mem, fl = ratios(g, b_k, t)
+            rows.append({"B_K": b_k, "T": t, "g": g,
+                         "mem_ratio": mem, "flops_ratio": fl})
+    return rows
+
+
+def validate_paper_claims():
+    """Returns (ok, details) — the faithful-reproduction gate."""
+    mem, fl = ratios(g=4, b_k=64, t=16)
+    ok = abs(mem - 0.213) < 0.002 and abs(fl - 0.562) < 0.002
+    return ok, {"mem_ratio@g4": round(mem, 4), "flops_ratio@g4": round(fl, 4),
+                "paper": {"mem": 0.213, "flops": 0.562}}
+
+
+def main():
+    ok, det = validate_paper_claims()
+    print(f"analytic_model,paper_validation,{'PASS' if ok else 'FAIL'},{det}")
+    print("B_K,T,g,mem_ratio_fsa_over_nsa,flops_ratio_fsa_over_nsa")
+    for r in figure2_table():
+        print(f"{r['B_K']},{r['T']},{r['g']},{r['mem_ratio']:.4f},"
+              f"{r['flops_ratio']:.4f}")
+
+
+if __name__ == "__main__":
+    main()

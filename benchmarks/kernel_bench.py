@@ -1,0 +1,93 @@
+"""Kernel-level benchmark (paper Fig. 4 analogue).
+
+This container has no TPU, so two complementary measurements are reported:
+  1. CPU wall time of the *semantic* implementations (interpret-mode Pallas
+     kernels at small shapes) — verifies the machinery end to end and gives
+     directional per-kernel cost;
+  2. the analytic latency projection at the paper's shapes on TPU v5e
+     (197 TFLOP/s bf16, 819 GB/s HBM): t = max(flops/peak, bytes/bw) from the
+     §3.3 model — the roofline-derived Fig. 4 twin, per (g, B_K, T, N).
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks import analytic_model as am
+from repro.core import NSAConfig
+from repro.core.selection import select_blocks
+from repro.kernels import ops
+
+V5E_FLOPS = 197e12
+V5E_BW = 819e9
+
+
+def time_call(fn, *args, reps=3):
+    fn(*args)  # compile/warm
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        jax.block_until_ready(fn(*args))
+    return (time.perf_counter() - t0) / reps * 1e6  # us
+
+
+def cpu_kernel_times(n=256, g=2, h_k=2, d=32, b_k=16, t_sel=4):
+    ks = jax.random.split(jax.random.PRNGKey(0), 4)
+    h = g * h_k
+    q = jax.random.normal(ks[0], (n, h, d))
+    k = jax.random.normal(ks[1], (n, h_k, d))
+    v = jax.random.normal(ks[2], (n, h_k, d))
+    scores = jax.random.uniform(ks[3], (n, h_k, n // b_k))
+    base = NSAConfig(block_size=b_k, num_selected=t_sel, q_block_size=32,
+                     cmp_block_size=8, cmp_stride=4)
+    idx, valid = select_blocks(scores, jnp.arange(n), base, n)
+    rows = []
+    for kern in ("fsa", "fsa_faithful", "nsa"):
+        cfg = NSAConfig(**{**base.__dict__, "kernel": kern})
+        fn = jax.jit(lambda q, k, v, c=cfg: ops.selected_attention(
+            q, k, v, idx, valid, c))
+        rows.append((f"selected/{kern}", time_call(fn, q, k, v)))
+    fn = jax.jit(lambda q, k, v: ops.full_attention(q, k, v, base))
+    rows.append(("full/flash", time_call(fn, q, k, v)))
+    return rows
+
+
+def v5e_projection():
+    """Analytic per-(config) selected-attention latency on one v5e chip."""
+    rows = []
+    d, h_k = 128, 4
+    for n in (8192, 16384, 32768, 65536):
+        for b_k, t in ((64, 16), (128, 8)):
+            for g in (1, 2, 4, 8):
+                h = g * h_k
+                t_eff = min(t, n // b_k)
+                fsa_t = max(am.fsa_flops(d, n, h, h_k, b_k, t_eff) / V5E_FLOPS,
+                            am.fsa_memory_bytes(d, n, h, h_k, t_eff) / V5E_BW)
+                nsa_t = max(am.nsa_flops(d, n, h, h_k, b_k, t_eff) / V5E_FLOPS,
+                            am.nsa_memory_bytes(d, n, h, h_k, b_k, t_eff) / V5E_BW)
+                # full attention: flops 4*N^2*d*h? causal half: 2*N^2*d*h
+                full_fl = 2 * n * n * d * h
+                full_by = 2 * n * (h + 2 * h_k) * d * (1 + n // 2048)
+                full_t = max(full_fl / V5E_FLOPS, full_by / V5E_BW)
+                rows.append({"N": n, "B_K": b_k, "T": t, "g": g,
+                             "fsa_us": fsa_t * 1e6, "nsa_us": nsa_t * 1e6,
+                             "full_us": full_t * 1e6,
+                             "speedup_vs_nsa": nsa_t / fsa_t,
+                             "speedup_vs_full": full_t / fsa_t})
+    return rows
+
+
+def main():
+    for name, us in cpu_kernel_times():
+        print(f"kernel_bench,{name}_cpu_interpret,{us:.0f}")
+    print("kernel_bench_v5e,N,B_K,T,g,fsa_us,nsa_us,full_us,speedup_vs_nsa,"
+          "speedup_vs_full")
+    for r in v5e_projection():
+        print(f"kernel_bench_v5e,{r['N']},{r['B_K']},{r['T']},{r['g']},"
+              f"{r['fsa_us']:.1f},{r['nsa_us']:.1f},{r['full_us']:.1f},"
+              f"{r['speedup_vs_nsa']:.2f},{r['speedup_vs_full']:.2f}")
+
+
+if __name__ == "__main__":
+    main()

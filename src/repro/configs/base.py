@@ -1,0 +1,135 @@
+"""Model configuration schema + input-shape definitions (assigned cells)."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+from repro.core.nsa_config import NSAConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEConfig:
+    num_experts: int = 64
+    num_shared: int = 0
+    top_k: int = 8
+    d_expert: int = 1024
+    capacity_factor: float = 1.25
+
+
+@dataclasses.dataclass(frozen=True)
+class MLAConfig:
+    kv_lora: int = 512
+    q_lora: int = 0            # 0 = full-rank q projection
+    rope_dim: int = 64
+    nope_dim: int = 128
+
+
+@dataclasses.dataclass(frozen=True)
+class SSMConfig:
+    d_state: int = 128
+    d_conv: int = 4
+    expand: int = 2
+    head_dim: int = 64
+    chunk: int = 64
+    n_groups: int = 1
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str = "model"
+    family: str = "lm"               # lm | moe | ssm | hybrid | encdec | vlm
+    n_layers: int = 4
+    d_model: int = 256
+    n_heads: int = 4
+    n_kv_heads: int = 2
+    d_ff: int = 1024
+    vocab: int = 1024
+    head_dim: int = 0                # 0 -> d_model // n_heads
+    mlp: str = "swiglu"              # swiglu | relu2 | gelu
+    attention: str = "nsa"           # nsa | full | swa
+    swa_window: int = 4096
+    rope_theta: float = 10000.0
+    norm_eps: float = 1e-5
+    tie_embeddings: bool = False
+    use_qkv_bias: bool = False
+    logit_softcap: float = 0.0
+
+    moe: Optional[MoEConfig] = None
+    mla: Optional[MLAConfig] = None
+    ssm: Optional[SSMConfig] = None
+    shared_attn_period: int = 6      # hybrid: shared attn every N mamba blocks
+
+    # encdec / vlm frontends (stubs provide precomputed embeddings)
+    n_enc_layers: int = 0
+    enc_seq: int = 1500
+    n_img_tokens: int = 256
+
+    nsa: NSAConfig = dataclasses.field(default_factory=NSAConfig)
+    attn_impl: str = "sparse"        # sparse | kernel | reference
+    q_chunk: int = 512               # sparse-path chunk size (perf knob)
+
+    remat: bool = True
+    scan_layers: bool = True
+    dtype: str = "bfloat16"          # activation/param dtype for dry-run
+
+    vocab_pad_to: int = 256          # pad vocab so logits shard over "model"
+
+    def hd(self) -> int:
+        return self.head_dim or self.d_model // self.n_heads
+
+    def g(self) -> int:
+        return self.n_heads // self.n_kv_heads
+
+    def padded_vocab(self) -> int:
+        p = self.vocab_pad_to
+        return ((self.vocab + p - 1) // p) * p
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeConfig:
+    name: str
+    seq_len: int
+    global_batch: int
+    mode: str                        # train | prefill | decode
+
+
+SHAPES = {
+    "train_4k": ShapeConfig("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeConfig("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeConfig("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeConfig("long_500k", 524288, 1, "decode"),
+}
+
+
+def reduced(cfg: ModelConfig, **overrides) -> ModelConfig:
+    """Tiny same-family config for CPU smoke tests."""
+    base = dict(
+        n_layers=2,
+        d_model=64,
+        n_heads=4,
+        n_kv_heads=max(1, min(cfg.n_kv_heads, 2)),
+        d_ff=128,
+        vocab=256,
+        head_dim=16,
+        nsa=NSAConfig(block_size=16, num_selected=4, cmp_block_size=8,
+                      cmp_stride=4, window_size=32, q_block_size=16,
+                      min_seq_for_sparse=1),
+        q_chunk=64,
+        scan_layers=cfg.scan_layers,
+        dtype="float32",
+    )
+    if cfg.moe is not None:
+        base["moe"] = MoEConfig(num_experts=4, num_shared=cfg.moe.num_shared,
+                                top_k=2, d_expert=32)
+    if cfg.mla is not None:
+        base["mla"] = MLAConfig(kv_lora=32, rope_dim=8, nope_dim=16)
+    if cfg.ssm is not None:
+        base["ssm"] = SSMConfig(d_state=16, d_conv=4, expand=2, head_dim=16,
+                                chunk=16)
+    if cfg.family in ("encdec",):
+        base["n_enc_layers"] = 2
+        base["enc_seq"] = 32
+    if cfg.family == "vlm":
+        base["n_img_tokens"] = 8
+    base.update(overrides)
+    return dataclasses.replace(cfg, **base)

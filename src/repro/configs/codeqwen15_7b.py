@@ -1,0 +1,14 @@
+"""codeqwen1.5-7b [dense] — qwen1.5 arch (qkv bias) [hf:Qwen/CodeQwen1.5-7B].
+
+32L d_model=4096 32H (GQA kv=32 => MHA, g = 1) d_ff=13440 vocab=92416.
+g = 1 is FSA's best case (the paper's 3.5x point): the vanilla NSA kernel
+pads 1 query head to the hardware minimum.
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="codeqwen1.5-7b", family="lm",
+    n_layers=32, d_model=4096, n_heads=32, n_kv_heads=32,
+    d_ff=13440, vocab=92416, mlp="swiglu", attention="nsa",
+    use_qkv_bias=True,
+)

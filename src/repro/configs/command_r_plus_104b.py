@@ -1,0 +1,12 @@
+"""command-r-plus-104b [dense] — GQA, no-bias [hf:CohereForAI/c4ai-command-r-v01].
+
+64L d_model=12288 96H (GQA kv=8) d_ff=33792 vocab=256000.  g = 12; the FSDP +
+TP showcase config (largest assigned model).
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="command-r-plus-104b", family="lm",
+    n_layers=64, d_model=12288, n_heads=96, n_kv_heads=8,
+    d_ff=33792, vocab=256000, mlp="swiglu", attention="nsa",
+)

@@ -1,0 +1,20 @@
+"""deepseek-v2-lite-16b [moe] — MLA kv_lora=512, shared+routed top-6 [arXiv:2405.04434].
+
+27L d_model=2048 16H (GQA kv=16) d_ff=1408 vocab=102400.  The assignment line
+reads both "MoE 64e top-6" and "2 shared+160 routed"; 160 routed is the 236B
+DeepSeek-V2 figure — we follow the 64-routed reading (+2 shared, top-6),
+matching the real V2-Lite (see DESIGN.md §5).
+
+MLA is implemented in absorbed (latent-space) form and NSA runs on the latent
+KV — mathematically identical to materialising the 16 KV heads, and the
+correct decode-time cache layout (DESIGN.md §Arch-applicability).
+"""
+from repro.configs.base import MLAConfig, ModelConfig, MoEConfig
+
+CONFIG = ModelConfig(
+    name="deepseek-v2-lite-16b", family="moe",
+    n_layers=27, d_model=2048, n_heads=16, n_kv_heads=16,
+    d_ff=1408, vocab=102400, mlp="swiglu", attention="nsa",
+    moe=MoEConfig(num_experts=64, num_shared=2, top_k=6, d_expert=1408),
+    mla=MLAConfig(kv_lora=512, rope_dim=64, nope_dim=128),
+)

@@ -1,0 +1,14 @@
+"""h2o-danube-3-4b [dense] — llama+mistral mix, SWA [arXiv:2401.16818].
+
+24L d_model=3840 32H (GQA kv=8) d_ff=10240 vocab=32000.  head_dim = 120
+(deliberately not 128-aligned — exercises kernel raggedness).  The arch's
+sliding-window design maps onto NSA's sliding branch (DESIGN.md §5).
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="h2o-danube-3-4b", family="lm",
+    n_layers=24, d_model=3840, n_heads=32, n_kv_heads=8,
+    d_ff=10240, vocab=32000, mlp="swiglu", attention="nsa",
+    swa_window=4096,
+)

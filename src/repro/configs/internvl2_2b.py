@@ -1,0 +1,14 @@
+"""internvl2-2b [vlm] — InternViT + InternLM2 backbone [arXiv:2404.16821; hf].
+
+24L d_model=2048 16H (GQA kv=8) d_ff=8192 vocab=92553.  The ViT frontend is a
+stub per the assignment: input_specs provides precomputed patch embeddings.
+NSA applies fully to the LM backbone (g = 2).
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="internvl2-2b", family="vlm",
+    n_layers=24, d_model=2048, n_heads=16, n_kv_heads=8,
+    d_ff=8192, vocab=92553, mlp="swiglu", attention="nsa",
+    n_img_tokens=256,
+)

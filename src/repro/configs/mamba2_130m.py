@@ -1,0 +1,15 @@
+"""mamba2-130m [ssm] — SSD (state-space duality) [arXiv:2405.21060].
+
+24L d_model=768 (attention-free) vocab=50280, ssm_state=128.
+NSA is inapplicable (no attention to sparsify) — implemented without the
+technique per the assignment; see DESIGN.md §Arch-applicability.
+"""
+from repro.configs.base import ModelConfig, SSMConfig
+
+CONFIG = ModelConfig(
+    name="mamba2-130m", family="ssm",
+    n_layers=24, d_model=768, n_heads=24, n_kv_heads=24,
+    d_ff=0, vocab=50280, attention="full",
+    ssm=SSMConfig(d_state=128, d_conv=4, expand=2, head_dim=64, chunk=128),
+    tie_embeddings=True,
+)

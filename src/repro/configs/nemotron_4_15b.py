@@ -1,0 +1,11 @@
+"""nemotron-4-15b [dense] — GQA, squared-ReLU MLP [arXiv:2402.16819].
+
+32L d_model=6144 48H (GQA kv=8) d_ff=24576 vocab=256000.  g = 6.
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="nemotron-4-15b", family="lm",
+    n_layers=32, d_model=6144, n_heads=48, n_kv_heads=8,
+    d_ff=24576, vocab=256000, mlp="relu2", attention="nsa",
+)

@@ -1,0 +1,13 @@
+"""olmoe-1b-7b [moe] — 64 experts top-8 [arXiv:2409.02060; hf].
+
+16L d_model=2048 16H (GQA kv=16 => MHA, g = 1) d_ff=1024 (per expert)
+vocab=50304, MoE 64e top-8.  Expert-parallel over the model axis.
+"""
+from repro.configs.base import ModelConfig, MoEConfig
+
+CONFIG = ModelConfig(
+    name="olmoe-1b-7b", family="moe",
+    n_layers=16, d_model=2048, n_heads=16, n_kv_heads=16,
+    d_ff=1024, vocab=50304, mlp="swiglu", attention="nsa",
+    moe=MoEConfig(num_experts=64, num_shared=0, top_k=8, d_expert=1024),
+)

@@ -1,0 +1,29 @@
+"""Architecture registry: --arch <id> lookup for launchers and benchmarks."""
+from __future__ import annotations
+
+import importlib
+
+from repro.configs.base import ModelConfig
+
+ARCHS: dict[str, str] = {
+    "internvl2-2b": "repro.configs.internvl2_2b",
+    "command-r-plus-104b": "repro.configs.command_r_plus_104b",
+    "nemotron-4-15b": "repro.configs.nemotron_4_15b",
+    "codeqwen1.5-7b": "repro.configs.codeqwen15_7b",
+    "h2o-danube-3-4b": "repro.configs.h2o_danube3_4b",
+    "olmoe-1b-7b": "repro.configs.olmoe_1b_7b",
+    "deepseek-v2-lite-16b": "repro.configs.deepseek_v2_lite_16b",
+    "mamba2-130m": "repro.configs.mamba2_130m",
+    "whisper-small": "repro.configs.whisper_small",
+    "zamba2-7b": "repro.configs.zamba2_7b",
+}
+
+
+def get_config(arch: str) -> ModelConfig:
+    if arch not in ARCHS:
+        raise KeyError(f"unknown arch {arch!r}; known: {sorted(ARCHS)}")
+    return importlib.import_module(ARCHS[arch]).CONFIG
+
+
+def all_configs() -> dict[str, ModelConfig]:
+    return {a: get_config(a) for a in ARCHS}

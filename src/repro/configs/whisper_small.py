@@ -1,0 +1,17 @@
+"""whisper-small [audio] — enc-dec, conv frontend stubbed [arXiv:2212.04356].
+
+12L (decoder; + 12 encoder layers) d_model=768 12H (kv=12) d_ff=3072
+vocab=51865.  input_specs provides precomputed frame embeddings (B, 1500, D)
+in place of the mel conv stem.  Decoder self-attention may use NSA but
+operating lengths are short; default full attention (DESIGN.md §5).
+long_500k is skipped for this arch (frontend-bound audio context).
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="whisper-small", family="encdec",
+    n_layers=12, n_enc_layers=12, enc_seq=1500,
+    d_model=768, n_heads=12, n_kv_heads=12,
+    d_ff=3072, vocab=51865, mlp="gelu", attention="full",
+    tie_embeddings=True,
+)

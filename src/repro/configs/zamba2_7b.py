@@ -1,0 +1,17 @@
+"""zamba2-7b [hybrid] — Mamba2 blocks + shared attention [arXiv:2411.15242].
+
+81L d_model=3584 32H (GQA kv=32 => g = 1) d_ff=14336 vocab=32000,
+ssm_state=64.  One *shared* attention block (single weight set) is applied
+after every `shared_attn_period` Mamba2 blocks, zamba-style (the per-
+invocation LoRA deltas of the real model are omitted).  NSA applies to the
+shared attention blocks; Mamba2 blocks are attention-free.
+"""
+from repro.configs.base import ModelConfig, SSMConfig
+
+CONFIG = ModelConfig(
+    name="zamba2-7b", family="hybrid",
+    n_layers=81, d_model=3584, n_heads=32, n_kv_heads=32,
+    d_ff=14336, vocab=32000, mlp="swiglu", attention="nsa",
+    ssm=SSMConfig(d_state=64, d_conv=4, expand=2, head_dim=112, chunk=128),
+    shared_attn_period=6,
+)

@@ -1,0 +1,30 @@
+"""repro.core — Native Sparse Attention algorithm + FSA fast paths (paper core)."""
+from repro.core.attention import (
+    compressed_and_selection,
+    init_nsa_params,
+    nsa_attention,
+)
+from repro.core.gating import apply_gates, init_gate_params
+from repro.core.nsa_config import NSAConfig
+from repro.core.reference import (
+    full_attention_ref,
+    nsa_attention_ref,
+    selected_attention_ref,
+    sliding_attention_ref,
+)
+from repro.core.sparse import nsa_attention_sparse, nsa_decode_step
+
+__all__ = [
+    "NSAConfig",
+    "nsa_attention",
+    "nsa_attention_ref",
+    "nsa_attention_sparse",
+    "nsa_decode_step",
+    "init_nsa_params",
+    "init_gate_params",
+    "apply_gates",
+    "compressed_and_selection",
+    "full_attention_ref",
+    "selected_attention_ref",
+    "sliding_attention_ref",
+]

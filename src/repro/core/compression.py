@@ -1,0 +1,70 @@
+"""NSA compression branch: coarse-grained block-summary tokens.
+
+Overlapping blocks of length ``l = cfg.cmp_block_size`` at stride
+``s = cfg.cmp_stride`` are summarised by a learnable map φ:
+position-encoded mean pooling followed by a linear projection (shared across
+KV heads).  Compressed token ``j`` summarises raw tokens ``[j*s, j*s+l)`` and
+becomes causally visible to query ``t`` once fully in the past
+(``j*s + l - 1 <= t``).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.nsa_config import NSAConfig
+
+
+def init_compression_params(key: jax.Array, cfg: NSAConfig, d_k: int,
+                            d_v: int | None = None, dtype=jnp.float32):
+    d_v = d_k if d_v is None else d_v
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "pe_k": (jax.random.normal(k1, (cfg.cmp_block_size, d_k)) * 0.02).astype(dtype),
+        "pe_v": (jax.random.normal(k2, (cfg.cmp_block_size, d_v)) * 0.02).astype(dtype),
+        "w_k": (jax.random.normal(k3, (d_k, d_k)) / np.sqrt(d_k)).astype(dtype),
+        "w_v": (jax.random.normal(jax.random.fold_in(k3, 1), (d_v, d_v))
+                / np.sqrt(d_v)).astype(dtype),
+    }
+
+
+def _pool_blocks(x: jnp.ndarray, pe: jnp.ndarray, w: jnp.ndarray, cfg: NSAConfig) -> jnp.ndarray:
+    """x: (N, h_k, d) -> compressed (N_cmp, h_k, d)."""
+    n = x.shape[0]
+    l, s = cfg.cmp_block_size, cfg.cmp_stride
+    n_cmp = cfg.num_cmp_blocks(n)
+    # Gather overlapping windows: idx[j, i] = j*s + i  (clamped for short tails).
+    idx = jnp.arange(n_cmp)[:, None] * s + jnp.arange(l)[None, :]
+    idx = jnp.minimum(idx, n - 1)
+    win = x[idx]                                   # (N_cmp, l, h_k, d)
+    win = win + pe[None, :, None, :].astype(x.dtype)
+    pooled = win.mean(axis=1)                      # (N_cmp, h_k, d)
+    return pooled @ w.astype(x.dtype)
+
+
+def compress_kv(params, k: jnp.ndarray, v: jnp.ndarray, cfg: NSAConfig):
+    """k, v: (N, h_k, d) -> (k_cmp, v_cmp): (N_cmp, h_k, d)."""
+    k_cmp = _pool_blocks(k, params["pe_k"], params["w_k"], cfg)
+    v_cmp = _pool_blocks(v, params["pe_v"], params["w_v"], cfg)
+    return k_cmp, v_cmp
+
+
+def cmp_visibility(q_pos: jnp.ndarray, n_cmp: int, cfg: NSAConfig) -> jnp.ndarray:
+    """(Q,) query positions -> (Q, N_cmp) bool: compressed token fully visible."""
+    ends = jnp.arange(n_cmp) * cfg.cmp_stride + cfg.cmp_block_size - 1
+    return q_pos[:, None] >= ends[None, :]
+
+
+def cmp_to_sel_map(n_cmp: int, n_sel_blocks: int, cfg: NSAConfig) -> np.ndarray:
+    """Static (N_cmp, b) overlap-weight matrix mapping compressed-token attention
+    probabilities to selection-block importance scores (paper eq. for l != B_K).
+
+    Entry (j, i) = |[j*s, j*s+l) ∩ [i*B_K, (i+1)*B_K)| / l.
+    """
+    s, l, bk = cfg.cmp_stride, cfg.cmp_block_size, cfg.block_size
+    j = np.arange(n_cmp)[:, None]
+    i = np.arange(n_sel_blocks)[None, :]
+    lo = np.maximum(j * s, i * bk)
+    hi = np.minimum(j * s + l, (i + 1) * bk)
+    return (np.maximum(hi - lo, 0) / l).astype(np.float32)

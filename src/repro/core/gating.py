@@ -1,0 +1,20 @@
+"""NSA branch gating: sigmoid gates per (token, head, branch) from the layer input."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def init_gate_params(key: jax.Array, model_dim: int, num_heads: int, dtype=jnp.float32):
+    scale = 1.0 / np.sqrt(model_dim)
+    return {
+        "w_gate": (jax.random.normal(key, (model_dim, num_heads, 3)) * scale).astype(dtype)
+    }
+
+
+def apply_gates(params, x: jnp.ndarray) -> jnp.ndarray:
+    """x: (..., model_dim) -> gates (..., num_heads, 3) in (0, 1)."""
+    logits = jnp.einsum("...m,mhb->...hb", x.astype(jnp.float32),
+                        params["w_gate"].astype(jnp.float32))
+    return jax.nn.sigmoid(logits)

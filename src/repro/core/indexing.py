@@ -1,0 +1,83 @@
+"""FSA index tensors (the I_i / O_i machinery of the paper, block-granular).
+
+Given the per-token selection ``idx/valid`` (N, h_K, T) these builders produce
+the scalar-prefetch operands consumed by the Pallas kernels:
+
+* ``build_qblock_union``     — per (KV head, query block): the ascending list
+  of KV blocks selected by ≥1 token of that query block (the inner-loop
+  schedule of the FSA-TPU kernel), padded by repeating the last valid entry so
+  that clamped index maps re-touch a block already in VMEM (the TPU analogue
+  of the paper's early-return).
+* ``build_kvblock_qlists``   — per (KV head, KV block): the list of query
+  blocks containing ≥1 token that selected it (the paper's I_i, block level),
+  plus for each entry the *slot* of this KV block inside that query block's
+  union list (the paper's O_i output mapping, used to address O_buf).
+
+On TPU at production scale these builders would themselves be fused kernels;
+here they are jnp (they are cheap: O(N·T) one-hots at block granularity).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core.nsa_config import NSAConfig
+
+
+def selection_presence(idx, valid, num_blocks: int, q_block: int):
+    """-> present (h_K, n_qblks, b) bool: q-block qb has ≥1 token selecting blk."""
+    n, h_k, t = idx.shape
+    oh = jnp.zeros((n, h_k, num_blocks), bool)
+    oh = oh.at[jnp.arange(n)[:, None, None], jnp.arange(h_k)[None, :, None], idx].max(
+        valid
+    )
+    n_qblks = (n + q_block - 1) // q_block
+    pad = n_qblks * q_block - n
+    if pad:
+        oh = jnp.pad(oh, ((0, pad), (0, 0), (0, 0)))
+    return oh.reshape(n_qblks, q_block, h_k, num_blocks).any(1).transpose(1, 0, 2)
+
+
+def _pack(present, cap: int):
+    """present (..., b) -> (ids (..., cap) ascending padded-with-last, cnt (...,))."""
+    b = present.shape[-1]
+    order = jnp.argsort(~present, axis=-1, stable=True).astype(jnp.int32)
+    cnt = present.sum(-1).astype(jnp.int32)
+    ids = order[..., :cap]
+    slot = jnp.minimum(jnp.arange(cap), jnp.maximum(cnt[..., None] - 1, 0))
+    ids = jnp.take_along_axis(ids, slot, axis=-1)
+    return ids, jnp.minimum(cnt, cap)
+
+
+def build_qblock_union(idx, valid, cfg: NSAConfig, seq_len: int, cap: int | None = None):
+    """-> (kv_ids (h_K, n_qblks, cap) int32, kv_cnt (h_K, n_qblks) int32)."""
+    b = cfg.num_kv_blocks(seq_len)
+    if cap is None:
+        cap = min(b, cfg.q_block_size * idx.shape[-1])
+    present = selection_presence(idx, valid, b, cfg.q_block_size)
+    return _pack(present, cap)
+
+
+def build_kvblock_qlists(idx, valid, cfg: NSAConfig, seq_len: int,
+                         union_cap: int | None = None):
+    """Paper I_i/O_i at block granularity.
+
+    Returns (q_ids, slot_ids, q_cnt):
+      q_ids   (h_K, b, n_qblks) — query blocks attending KV block i (ascending,
+                                  padded with last valid);
+      slot_ids(h_K, b, n_qblks) — position of KV block i in that query block's
+                                  union list (O_buf slot);
+      q_cnt   (h_K, b)          — number of valid entries.
+    """
+    b = cfg.num_kv_blocks(seq_len)
+    present = selection_presence(idx, valid, b, cfg.q_block_size)  # (h_K, nq, b)
+    # union slot of blk i within q-block qb = #selected blocks with id < i
+    csum = jnp.cumsum(present, axis=-1)
+    slot_of = jnp.where(present, csum - 1, 0).astype(jnp.int32)    # (h_K, nq, b)
+    present_t = present.transpose(0, 2, 1)                         # (h_K, b, nq)
+    q_ids, q_cnt = _pack(present_t, present_t.shape[-1])
+    hk = jnp.arange(q_ids.shape[0])[:, None, None]
+    blk = jnp.arange(b)[None, :, None]
+    slot_ids = slot_of[hk, q_ids, blk]                             # (h_K, b, nq)
+    if union_cap is not None:
+        slot_ids = jnp.minimum(slot_ids, union_cap - 1)
+    return q_ids, slot_ids.astype(jnp.int32), q_cnt

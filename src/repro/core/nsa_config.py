@@ -1,0 +1,62 @@
+"""NSA / FSA hyper-parameter bundle.
+
+Notation follows the paper (Table 1):
+  N       sequence length
+  d_K/d_V head dims (uniform d in practice)
+  h       number of query heads
+  h_K     number of KV heads,  g = h / h_K  (GQA group size)
+  T       number of selected KV blocks per query token (``num_selected``)
+  B_K     KV block size (``block_size``)
+  B_Q     FSA query-batch (query-block) size (``q_block_size``)
+"""
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class NSAConfig:
+    """Hyper-parameters of the NSA sparse-attention algorithm + FSA kernel knobs."""
+
+    # --- NSA algorithm hyper-parameters (paper defaults: B_K=64, T=16) ---
+    block_size: int = 64          # B_K: tokens per selected KV block
+    num_selected: int = 16        # T: top-k selected blocks per query token
+    cmp_block_size: int = 32      # l: compression block length
+    cmp_stride: int = 16          # d: compression stride (overlapping blocks)
+    window_size: int = 512        # sliding-window branch width
+    num_init_blocks: int = 1      # forced-selected initial blocks
+    num_local_blocks: int = 2     # forced-selected local (trailing) blocks
+
+    # --- FSA kernel knobs (TPU) ---
+    q_block_size: int = 128       # B_Q: query tokens per FSA batch (MXU M dim)
+    kernel: str = "fsa"           # fsa | fsa_faithful | nsa | reference
+    interpret: bool = True        # Pallas interpret mode (no TPU in container)
+
+    # --- sparse (XLA) path strategy for the selected branch ---
+    # "union":  FSA organization in XLA ops — per query chunk, gather the
+    #           union of selected KV blocks ONCE and mask (block-batched,
+    #           like the kernel).  Production default.
+    # "gather": naive per-token gather of T blocks (each token re-fetches its
+    #           blocks) — the vanilla-NSA-style baseline for §Perf.
+    selected_impl: str = "union"
+
+    # --- branch toggles (full-attention fallback for short sequences) ---
+    min_seq_for_sparse: int = 256  # below this, dense attention is used
+
+    def num_kv_blocks(self, seq_len: int) -> int:
+        return max(1, (seq_len + self.block_size - 1) // self.block_size)
+
+    def num_cmp_blocks(self, seq_len: int) -> int:
+        if seq_len < self.cmp_block_size:
+            return 1
+        return (seq_len - self.cmp_block_size) // self.cmp_stride + 1
+
+    def effective_T(self, seq_len: int) -> int:
+        """T clamped to the number of KV blocks (short sequences)."""
+        return min(self.num_selected, self.num_kv_blocks(seq_len))
+
+    def validate(self) -> None:
+        assert self.block_size % 8 == 0, "B_K must be TPU-sublane aligned"
+        assert self.q_block_size % 8 == 0, "B_Q must be TPU-sublane aligned"
+        assert self.cmp_block_size % self.cmp_stride == 0
+        assert self.num_init_blocks >= 1 and self.num_local_blocks >= 1

@@ -1,0 +1,127 @@
+"""Dense-mask pure-jnp oracles for every attention branch.
+
+These are the ground truth for all kernels and sparse fast paths.  They
+materialise (Q, N) masks, so use them only at test scales.
+
+All functions are unbatched — q: (N, h, d), k/v: (N, h_k, d); vmap for batch.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core import compression, selection
+from repro.core.nsa_config import NSAConfig
+
+
+def _safe_softmax(scores: jnp.ndarray, mask: jnp.ndarray):
+    """Masked softmax that returns zeros (not NaN) for fully-masked rows.
+
+    Returns (probs, lse) with lse = log-sum-exp over unmasked entries.
+    """
+    scores = jnp.where(mask, scores, selection.NEG_INF)
+    m = jnp.max(scores, axis=-1, keepdims=True)
+    m = jnp.maximum(m, selection.NEG_INF / 2)  # keep finite when all masked
+    e = jnp.exp(scores - m) * mask
+    s = e.sum(axis=-1, keepdims=True)
+    probs = e / jnp.maximum(s, 1e-30)
+    lse = jnp.squeeze(m, -1) + jnp.log(jnp.maximum(jnp.squeeze(s, -1), 1e-30))
+    return probs, lse
+
+
+def _gqa_scores(q: jnp.ndarray, k: jnp.ndarray) -> jnp.ndarray:
+    """q: (Q, h, d), k: (S, h_k, d) -> (Q, h, S) with GQA head mapping."""
+    n, h, d = q.shape
+    h_k = k.shape[1]
+    g = h // h_k
+    qg = q.reshape(n, h_k, g, d)
+    s = jnp.einsum("qkgd,skd->qkgs", qg.astype(jnp.float32), k.astype(jnp.float32))
+    return s.reshape(n, h, -1) / jnp.sqrt(d).astype(jnp.float32)
+
+
+def _gqa_out(probs: jnp.ndarray, v: jnp.ndarray) -> jnp.ndarray:
+    """probs: (Q, h, S), v: (S, h_k, dv) -> (Q, h, dv)."""
+    n, h, _ = probs.shape
+    h_k = v.shape[1]
+    g = h // h_k
+    pg = probs.reshape(n, h_k, g, -1)
+    o = jnp.einsum("qkgs,skd->qkgd", pg, v.astype(jnp.float32))
+    return o.reshape(n, h, v.shape[-1])
+
+
+def full_attention_ref(q, k, v, *, causal: bool = True):
+    """Standard (causal) full attention oracle."""
+    n = q.shape[0]
+    s = k.shape[0]
+    scores = _gqa_scores(q, k)
+    if causal:
+        mask = jnp.arange(n)[:, None] + (s - n) >= jnp.arange(s)[None, :]
+    else:
+        mask = jnp.ones((n, s), bool)
+    probs, _ = _safe_softmax(scores, mask[:, None, :])
+    return _gqa_out(probs, v).astype(q.dtype)
+
+
+def sliding_attention_ref(q, k, v, window: int):
+    """Causal sliding-window oracle (window includes the current token)."""
+    n, s = q.shape[0], k.shape[0]
+    pos_q = jnp.arange(n) + (s - n)
+    pos_k = jnp.arange(s)
+    mask = (pos_q[:, None] >= pos_k[None, :]) & (pos_q[:, None] - pos_k[None, :] < window)
+    probs, _ = _safe_softmax(_gqa_scores(q, k), mask[:, None, :])
+    return _gqa_out(probs, v).astype(q.dtype)
+
+
+def compressed_attention_ref(params, q, k, v, cfg: NSAConfig, q_pos=None):
+    """Compressed branch oracle. Returns (out, p_cmp) — p_cmp feeds selection."""
+    n = q.shape[0]
+    k_cmp, v_cmp = compression.compress_kv(params, k, v, cfg)
+    if q_pos is None:
+        q_pos = jnp.arange(n) + (k.shape[0] - n)
+    vis = compression.cmp_visibility(q_pos, k_cmp.shape[0], cfg)
+    probs, _ = _safe_softmax(_gqa_scores(q, k_cmp), vis[:, None, :])
+    return _gqa_out(probs, v_cmp).astype(q.dtype), probs
+
+
+def selected_attention_ref(q, k, v, block_idx, block_valid, cfg: NSAConfig, q_pos=None):
+    """Selected branch oracle via a dense (Q, h_k, S) mask.
+
+    block_idx/block_valid: (Q, h_k, T) from selection.select_blocks.
+    Token s is visible to query t iff s <= t and floor(s/B_K) is selected.
+    """
+    n, s = q.shape[0], k.shape[0]
+    h_k = k.shape[1]
+    if q_pos is None:
+        q_pos = jnp.arange(n) + (s - n)
+    kv_blk = jnp.arange(s) // cfg.block_size                          # (S,)
+    sel = (block_idx[..., None] == kv_blk) & block_valid[..., None]   # (Q,h_k,T,S)
+    mask = sel.any(axis=2)                                            # (Q, h_k, S)
+    mask &= q_pos[:, None, None] >= jnp.arange(s)[None, None, :]
+    g = q.shape[1] // h_k
+    mask_h = jnp.repeat(mask, g, axis=1)                              # (Q, h, S)
+    probs, lse = _safe_softmax(_gqa_scores(q, k), mask_h)
+    return _gqa_out(probs, v).astype(q.dtype), lse
+
+
+def nsa_attention_ref(params, x_gates, q, k, v, cfg: NSAConfig):
+    """Full NSA oracle: compressed + selected + sliding combined by gates.
+
+    x_gates: (N, h, 3) sigmoid gate values (computed by the caller's gate MLP).
+    Returns (N, h, d).
+    """
+    n = q.shape[0]
+    out_cmp, p_cmp = compressed_attention_ref(params, q, k, v, cfg)
+    sel_map = jnp.asarray(
+        compression.cmp_to_sel_map(p_cmp.shape[-1], cfg.num_kv_blocks(n), cfg)
+    )
+    g = q.shape[1] // k.shape[1]
+    scores = selection.importance_scores(p_cmp, sel_map, g)
+    idx, valid = selection.select_blocks(scores, jnp.arange(n), cfg, n)
+    out_sel, _ = selected_attention_ref(q, k, v, idx, valid, cfg)
+    out_win = sliding_attention_ref(q, k, v, cfg.window_size)
+    gates = x_gates.astype(jnp.float32)
+    out = (
+        gates[..., 0:1] * out_cmp.astype(jnp.float32)
+        + gates[..., 1:2] * out_sel.astype(jnp.float32)
+        + gates[..., 2:3] * out_win.astype(jnp.float32)
+    )
+    return out.astype(q.dtype)

@@ -1,0 +1,73 @@
+"""NSA top-T KV-block selection from compressed-attention scores.
+
+Selection is shared across the ``g`` query heads of a GQA group (scores are
+summed over the group, per KV head) so that one KV fetch serves the whole
+group — this is what both the NSA and FSA kernels exploit.
+
+Returned indices are ascending-sorted; invalid slots (fewer causal blocks than
+``T``) are marked in a boolean mask and their index clamped into range so that
+gathers stay safe.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.nsa_config import NSAConfig
+
+NEG_INF = -1e30
+
+
+def importance_scores(p_cmp: jnp.ndarray, sel_map: jnp.ndarray, g: int) -> jnp.ndarray:
+    """p_cmp: (Q, h, N_cmp) compressed-attention probs; sel_map: (N_cmp, b).
+
+    Returns (Q, h_k, b) group-summed selection-block importance.
+    """
+    q, h, _ = p_cmp.shape
+    scores = jnp.einsum("qhc,cb->qhb", p_cmp.astype(jnp.float32), sel_map)
+    return scores.reshape(q, h // g, g, -1).sum(axis=2)
+
+
+def select_blocks(
+    scores: jnp.ndarray,
+    q_pos: jnp.ndarray,
+    cfg: NSAConfig,
+    seq_len: int,
+):
+    """Top-T block selection with forced initial/local blocks and causality.
+
+    scores: (Q, h_k, b) importance; q_pos: (Q,) absolute query positions.
+    Returns (idx, valid): idx int32 (Q, h_k, T) ascending, valid bool same shape.
+    """
+    from repro.parallel.axes import shard as _shard
+
+    q, h_k, b = scores.shape
+    t_eff = min(cfg.num_selected, b)
+    blk = jnp.arange(b)
+    cur_blk = q_pos // cfg.block_size                       # (Q,)
+    # keep selection math local per KV-head shard: top_k/argsort are row-wise,
+    # so pinning the layout avoids XLA gathering scores per chunk
+    scores = _shard(scores, None, "kv_heads", None)
+
+    causal = blk[None, :] <= cur_blk[:, None]               # (Q, b) block start <= t
+    forced_init = blk[None, :] < cfg.num_init_blocks
+    # local: current block and the (num_local-1) preceding ones
+    forced_local = (blk[None, :] <= cur_blk[:, None]) & (
+        blk[None, :] >= cur_blk[:, None] - (cfg.num_local_blocks - 1)
+    )
+    forced = (forced_init | forced_local) & causal          # (Q, b)
+
+    s = scores + jnp.where(forced[:, None, :], 1e30, 0.0)
+    s = jnp.where(causal[:, None, :], s, NEG_INF)
+
+    top_s, top_i = jax.lax.top_k(s, t_eff)                  # (Q, h_k, T)
+    valid = top_s > NEG_INF / 2
+    # ascending sort by index, invalid slots pushed to the end
+    sort_key = jnp.where(valid, top_i, b + 1)
+    order = jnp.argsort(sort_key, axis=-1)
+    top_i = jnp.take_along_axis(top_i, order, axis=-1)
+    valid = jnp.take_along_axis(valid, order, axis=-1)
+    idx = jnp.where(valid, top_i, 0).astype(jnp.int32)      # clamp for safe gather
+    idx = _shard(idx, None, "kv_heads", None)
+    valid = _shard(valid, None, "kv_heads", None)
+    return idx, valid

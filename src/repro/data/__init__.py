@@ -1,0 +1,2 @@
+"""repro.data — deterministic synthetic pipeline + packing."""
+from repro.data.pipeline import DataConfig, SyntheticLM, pack_documents

@@ -1,0 +1,4 @@
+"""repro.kernels — Pallas TPU kernels for the perf-critical attention paths."""
+from repro.kernels.ops import full_attention, selected_attention, sliding_attention
+
+__all__ = ["selected_attention", "full_attention", "sliding_attention"]

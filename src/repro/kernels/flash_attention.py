@@ -1,0 +1,131 @@
+"""Pallas TPU flash attention (full-attention baseline + sliding-window branch).
+
+Layouts (GQA folded per KV head):
+  q: (h_K, Nq·g, d)  rows are token-major, group-head-minor
+  k/v: (h_K, Nk, d)
+  out: (h_K, Nq·g, d)
+
+Grid: (h_K, num_q_blocks, num_kv_blocks) — kv innermost (sequential,
+"arbitrary"); online-softmax state lives in VMEM scratch across kv steps.
+Causal/window-violating kv blocks are skipped with ``pl.when`` and their HBM
+fetch elided by clamping the kv index map to the last useful block.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+            scale, g, block_q, block_k, seq_q, seq_k, causal, window):
+    iq, ik = pl.program_id(1), pl.program_id(2)
+    nk = pl.num_programs(2)
+    rows = q_ref.shape[1]
+
+    @pl.when(ik == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    # does this kv block intersect the allowed band for this q block?
+    q_lo = iq * block_q
+    q_hi = q_lo + block_q - 1          # token positions (pre-group-fold)
+    k_lo = ik * block_k
+    k_hi = k_lo + block_k - 1
+    live = k_lo < seq_k
+    if causal:
+        live &= k_lo <= q_hi + (seq_k - seq_q)
+    if window is not None:
+        live &= k_hi >= q_lo + (seq_k - seq_q) - (window - 1)
+
+    @pl.when(live)
+    def _step():
+        q = q_ref[0].astype(jnp.float32)
+        k = k_ref[0].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        tok = q_lo + jax.lax.broadcasted_iota(jnp.int32, (rows, block_k), 0) // g
+        kpos = k_lo + jax.lax.broadcasted_iota(jnp.int32, (rows, block_k), 1)
+        mask = kpos < seq_k
+        if causal:
+            mask &= tok + (seq_k - seq_q) >= kpos
+        if window is not None:
+            mask &= tok + (seq_k - seq_q) - kpos < window
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_scr[...][:, 0:1]
+        l_prev = l_scr[...][:, 0:1]
+        m_cur = jnp.max(s, axis=1, keepdims=True)
+        m_new = jnp.maximum(m_prev, m_cur)
+        p = jnp.where(mask, jnp.exp(s - m_new), 0.0)
+        corr = jnp.exp(m_prev - m_new)
+        l_new = corr * l_prev + jnp.sum(p, axis=1, keepdims=True)
+        v = v_ref[0].astype(jnp.float32)
+        pv = jax.lax.dot_general(p, v, (((1,), (0,)), ((), ())),
+                                 preferred_element_type=jnp.float32)
+        acc_scr[...] = acc_scr[...] * corr + pv
+        m_scr[...] = jnp.broadcast_to(m_new, m_scr.shape)
+        l_scr[...] = jnp.broadcast_to(l_new, l_scr.shape)
+
+    @pl.when(ik == nk - 1)
+    def _done():
+        l = l_scr[...][:, 0:1]
+        o_ref[0] = (acc_scr[...] / jnp.maximum(l, 1e-30)).astype(o_ref.dtype)
+
+
+def flash_attention(q, k, v, *, g: int, causal: bool = True,
+                    window: int | None = None, block_q: int = 128,
+                    block_k: int = 128, interpret: bool = True):
+    """q: (h_K, Nq·g, d); k, v: (h_K, Nk, d). Returns (h_K, Nq·g, d)."""
+    h_k, rows_total, d = q.shape
+    dv = v.shape[-1]
+    seq_k = k.shape[1]
+    seq_q = rows_total // g
+    block_q = min(block_q, seq_q)
+    block_k = min(block_k, seq_k)
+    nq = pl.cdiv(seq_q, block_q)
+    nk = pl.cdiv(seq_k, block_k)
+    rows = block_q * g
+    scale = 1.0 / (d ** 0.5)
+
+    # clamp kv index inside the useful band so skipped steps re-touch a
+    # resident block (no HBM refetch)
+    def kv_index(hk, iq, ik):
+        if causal:
+            hi = jax.lax.div((iq + 1) * block_q - 1 + (seq_k - seq_q), block_k)
+            ik = jnp.minimum(ik, hi)
+        if window is not None:
+            lo = jnp.maximum(
+                (iq * block_q + (seq_k - seq_q) - (window - 1)) // block_k, 0)
+            ik = jnp.maximum(ik, lo)
+        return (hk, ik, 0)
+
+    kernel = functools.partial(
+        _kernel, scale=scale, g=g, block_q=block_q, block_k=block_k,
+        seq_q=seq_q, seq_k=seq_k, causal=causal, window=window)
+    return pl.pallas_call(
+        kernel,
+        grid=(h_k, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, rows, d), lambda hk, iq, ik: (hk, iq, 0)),
+            pl.BlockSpec((1, block_k, d), kv_index),
+            pl.BlockSpec((1, block_k, dv), kv_index),
+        ],
+        out_specs=pl.BlockSpec((1, rows, dv), lambda hk, iq, ik: (hk, iq, 0)),
+        out_shape=jax.ShapeDtypeStruct((h_k, rows_total, dv), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((rows, 128), jnp.float32),
+            pltpu.VMEM((rows, 128), jnp.float32),
+            pltpu.VMEM((rows, dv), jnp.float32),
+        ],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,174 @@
+"""Jit'd dispatch wrappers around the Pallas kernels.
+
+``selected_attention`` is the public entry for the paper's bottleneck branch;
+``cfg.kernel`` picks the implementation:
+
+  fsa           — FSA-TPU kernel (production; DESIGN.md §2)
+  fsa_faithful  — paper-structure three-kernel pipeline (ablation)
+  nsa           — vanilla-NSA-style baseline kernel (g padded to 8)
+  reference     — dense-mask oracle
+
+Forward runs the kernel; backward is a custom VJP through the sparse
+gather formulation (identical math, XLA-differentiable) — on-TPU backward
+kernels are a recorded extension (EXPERIMENTS.md §Perf).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import indexing, sparse
+from repro.core.nsa_config import NSAConfig
+from repro.kernels import flash_attention as _flash
+from repro.kernels import fsa_faithful as _faithful
+from repro.kernels import fsa_selected as _fsa
+from repro.kernels import nsa_selected as _nsa
+from repro.kernels import ref as _ref
+
+
+def _pad_tokens(x, n_pad):
+    return jnp.pad(x, ((0, n_pad - x.shape[0]),) + ((0, 0),) * (x.ndim - 1))
+
+
+def _selected_fwd_impl(q, k, v, idx, valid, cfg: NSAConfig):
+    n, h, d = q.shape
+    h_k = k.shape[1]
+    g = h // h_k
+    bq = min(cfg.q_block_size, max(8, n))
+    n_pad = ((n + bq - 1) // bq) * bq
+
+    qp = _pad_tokens(q, n_pad)
+    idxp = _pad_tokens(idx, n_pad)
+    validp = _pad_tokens(valid, n_pad)
+    # normalize: ascending sort, duplicates invalidated (top-k selection never
+    # produces dups, but the kernel contract must not depend on that)
+    key = jnp.where(validp, idxp, jnp.iinfo(jnp.int32).max // 2)
+    order = jnp.argsort(key, axis=-1)
+    idxp = jnp.take_along_axis(idxp, order, axis=-1)
+    validp = jnp.take_along_axis(validp, order, axis=-1)
+    dup = jnp.concatenate(
+        [jnp.zeros_like(validp[..., :1]),
+         (idxp[..., 1:] == idxp[..., :-1]) & validp[..., 1:] & validp[..., :-1]],
+        axis=-1)
+    validp &= ~dup
+    sel = jnp.where(validp, idxp, -1).astype(jnp.int32)       # (N, h_K, T)
+    # rows layout for sel: repeat each token's list over the g group heads
+    sel_rows = jnp.repeat(sel.transpose(1, 0, 2), g, axis=1)  # (h_K, N·g, T)
+    q_rows = _ref.rows_from_heads(qp, h_k)
+    k_t = k.transpose(1, 0, 2)
+    v_t = v.transpose(1, 0, 2)
+
+    if cfg.kernel == "nsa":
+        g_pad = max(g, 8)
+        q_pad = qp.reshape(n_pad, h_k, g, d).transpose(1, 0, 2, 3)
+        q_pad = jnp.pad(q_pad, ((0, 0), (0, 0), (0, g_pad - g), (0, 0)))
+        o = _nsa.nsa_selected(q_pad, k_t, v_t, sel.transpose(1, 0, 2),
+                              block_k=cfg.block_size, interpret=cfg.interpret)
+        o = o[:, :, :g].transpose(1, 0, 2, 3).reshape(n_pad, h, -1)
+        return o[:n]
+
+    kv_ids, kv_cnt = indexing.build_qblock_union(idxp, validp, cfg, k.shape[0])
+    if cfg.kernel == "fsa":
+        o_rows = _fsa.fsa_selected(q_rows, k_t, v_t, sel_rows, kv_ids, kv_cnt,
+                                   g=g, block_q=bq, block_k=cfg.block_size,
+                                   interpret=cfg.interpret)
+    elif cfg.kernel == "fsa_faithful":
+        q_ids, slot_ids, q_cnt = indexing.build_kvblock_qlists(
+            idxp, validp, cfg, k.shape[0], union_cap=kv_ids.shape[-1])
+        o_rows = _faithful.fsa_faithful(q_rows, k_t, v_t, sel_rows, kv_ids,
+                                        kv_cnt, q_ids, slot_ids, q_cnt, g=g,
+                                        block_q=bq, block_k=cfg.block_size,
+                                        interpret=cfg.interpret)
+    elif cfg.kernel == "reference":
+        return _ref.selected_ref(q, k, v, idx, valid, cfg)
+    else:
+        raise ValueError(f"unknown kernel: {cfg.kernel}")
+    return _ref.heads_from_rows(o_rows, n_pad)[:n]
+
+
+def _selected_sparse(q, k, v, idx, valid, cfg: NSAConfig):
+    """Differentiable twin of the kernel (chunked gather path)."""
+    n = q.shape[0]
+    c = min(512, n)
+    pad = (c - n % c) % c
+    qp, idxp, validp = (_pad_tokens(a, n + pad) for a in (q, idx, valid))
+
+    def body(args):
+        q_c, i_c, v_c, pos_c = args
+        return sparse.selected_gather_attention(q_c, k, v, i_c, v_c, cfg, pos_c)
+
+    nc = (n + pad) // c
+    out = jax.lax.map(body, (qp.reshape(nc, c, *q.shape[1:]),
+                             idxp.reshape(nc, c, *idx.shape[1:]),
+                             validp.reshape(nc, c, *valid.shape[1:]),
+                             jnp.arange(n + pad).reshape(nc, c)))
+    return out.reshape(n + pad, q.shape[1], -1)[:n]
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(5,))
+def selected_attention(q, k, v, idx, valid, cfg: NSAConfig):
+    """Selected-branch attention. q: (N,h,d), k/v: (S,h_K,d), idx/valid: (N,h_K,T)."""
+    return _selected_fwd_impl(q, k, v, idx, valid, cfg)
+
+
+def _sel_fwd(q, k, v, idx, valid, cfg):
+    return _selected_fwd_impl(q, k, v, idx, valid, cfg), (q, k, v, idx, valid)
+
+
+def _sel_bwd(cfg, res, dout):
+    q, k, v, idx, valid = res
+    _, vjp = jax.vjp(lambda q_, k_, v_: _selected_sparse(q_, k_, v_, idx, valid, cfg),
+                     q, k, v)
+    dq, dk, dv = vjp(dout)
+    zi = jnp.zeros(idx.shape, jax.dtypes.float0)
+    zv = jnp.zeros(valid.shape, jax.dtypes.float0)
+    return dq, dk, dv, zi, zv
+
+
+selected_attention.defvjp(_sel_fwd, _sel_bwd)
+
+
+def _flash_fwd_impl(q, k, v, cfg: NSAConfig, causal, window):
+    n, h, d = q.shape
+    h_k = k.shape[1]
+    g = h // h_k
+    bq = min(cfg.q_block_size, max(8, n))
+    n_pad = ((n + bq - 1) // bq) * bq
+    q_rows = _ref.rows_from_heads(_pad_tokens(q, n_pad), h_k)
+    o_rows = _flash.flash_attention(
+        q_rows, k.transpose(1, 0, 2), v.transpose(1, 0, 2), g=g, causal=causal,
+        window=window, block_q=bq, block_k=min(128, k.shape[0]),
+        interpret=cfg.interpret)
+    return _ref.heads_from_rows(o_rows, n_pad)[:n]
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5))
+def _flash_op(q, k, v, cfg, causal, window):
+    return _flash_fwd_impl(q, k, v, cfg, causal, window)
+
+
+def _flash_fwd(q, k, v, cfg, causal, window):
+    return _flash_fwd_impl(q, k, v, cfg, causal, window), (q, k, v)
+
+
+def _flash_bwd(cfg, causal, window, res, dout):
+    q, k, v = res
+    _, vjp = jax.vjp(
+        lambda q_, k_, v_: _ref.flash_ref_chunked(q_, k_, v_, causal=causal,
+                                                  window=window), q, k, v)
+    return vjp(dout)
+
+
+_flash_op.defvjp(_flash_fwd, _flash_bwd)
+
+
+def full_attention(q, k, v, cfg: NSAConfig, *, causal: bool = True):
+    """Flash full attention. q: (N,h,d), k/v: (S,h_K,d)."""
+    return _flash_op(q, k, v, cfg, causal, None)
+
+
+def sliding_attention(q, k, v, window: int, cfg: NSAConfig):
+    """Flash sliding-window attention (causal)."""
+    return _flash_op(q, k, v, cfg, True, window)

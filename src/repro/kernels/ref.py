@@ -1,0 +1,64 @@
+"""Pure-jnp oracles for every Pallas kernel, in kernel layouts.
+
+These delegate to the dense-mask references in ``repro.core.reference`` and
+are the assert_allclose targets of the kernel test sweeps.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import reference
+from repro.core.nsa_config import NSAConfig
+
+
+def rows_from_heads(q: jnp.ndarray, h_k: int) -> jnp.ndarray:
+    """(N, h, d) -> (h_K, N·g, d), token-major group-head-minor rows."""
+    n, h, d = q.shape
+    g = h // h_k
+    return q.reshape(n, h_k, g, d).transpose(1, 0, 2, 3).reshape(h_k, n * g, d)
+
+
+def heads_from_rows(o: jnp.ndarray, n: int) -> jnp.ndarray:
+    """(h_K, N·g, d) -> (N, h, d)."""
+    h_k, rows, d = o.shape
+    g = rows // n
+    return o.reshape(h_k, n, g, d).transpose(1, 0, 2, 3).reshape(n, h_k * g, d)
+
+
+def selected_ref(q, k, v, idx, valid, cfg: NSAConfig):
+    """Oracle for the selected branch. q: (N,h,d), k/v: (N,h_K,d)."""
+    out, _ = reference.selected_attention_ref(q, k, v, idx, valid, cfg)
+    return out
+
+
+def flash_ref(q, k, v, *, causal=True, window=None):
+    """Oracle for the flash kernel. q: (N,h,d), k/v: (S,h_K,d)."""
+    if window is not None:
+        return reference.sliding_attention_ref(q, k, v, window)
+    return reference.full_attention_ref(q, k, v, causal=causal)
+
+
+def flash_ref_chunked(q, k, v, *, causal=True, window=None, q_chunk=512):
+    """Memory-bounded oracle (lax.map over query chunks) — used as the
+    differentiable body behind the kernels' custom-VJP backward pass."""
+    n, h, d = q.shape
+    s = k.shape[0]
+    c = min(q_chunk, n)
+    pad = (c - n % c) % c
+    qp = jnp.pad(q, ((0, pad), (0, 0), (0, 0)))
+
+    def body(args):
+        q_c, c0 = args
+        pos_q = jnp.arange(c) + c0 + (s - n)
+        scores = reference._gqa_scores(q_c, k)
+        mask = jnp.ones((c, s), bool) if not causal else (
+            pos_q[:, None] >= jnp.arange(s)[None, :])
+        if window is not None:
+            mask &= pos_q[:, None] - jnp.arange(s)[None, :] < window
+        probs, _ = reference._safe_softmax(scores, mask[:, None, :])
+        return reference._gqa_out(probs, v).astype(q.dtype)
+
+    starts = jnp.arange(0, n + pad, c)
+    out = jax.lax.map(body, (qp.reshape(-1, c, h, d), starts))
+    return out.reshape(-1, h, v.shape[-1])[:n]

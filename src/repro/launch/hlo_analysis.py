@@ -1,0 +1,236 @@
+"""Post-optimization HLO analysis with while-loop trip-count correction.
+
+``compiled.cost_analysis()`` counts a while-loop body ONCE, but a
+scanned-layers model executes it n_layers times (and chunked attention / loss
+loops execute S/chunk times) — without correction every roofline term is off
+by up to L×.  This module parses ``compiled.as_text()`` into computations,
+builds a per-computation symbol table (var -> shape), extracts each while
+loop's trip count from its condition, and accumulates:
+
+  * dot FLOPs            (2 · |out| · contraction)
+  * memory bytes         (operands + result of top-level ops; fusions are
+                          counted at their boundary only — post-fusion HLO
+                          makes this a realistic traffic model)
+  * collective bytes     (by kind; reduce-scatter scaled by group size)
+
+through the call graph with multipliers.  Unknown trip counts multiply by 1
+and set ``"trip_count_unknown"``.
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+
+_DTYPE_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "s64": 8, "u64": 8,
+                "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1,
+                "pred": 1, "f8e4m3fn": 1, "f8e5m2": 1, "c64": 8, "c128": 16}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_COMP_HDR = re.compile(r"^(ENTRY\s+)?%?([\w.\-]+)\s*\(")
+_DEF_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(.+)$")
+_SHAPE_TOK = re.compile(r"^\(?(\w+)\[([\d,]*)\]")
+_OP_RE = re.compile(r"^(?:\(?[\w\[\],\s]*\)?\{?[\d,]*\}?\s+)?([\w\-]+)\(")
+_OPERANDS_RE = re.compile(r"\(([^)]*)\)")
+_NAME_TOK = re.compile(r"%?([\w.\-]+)")
+_CONST_RE = re.compile(r"constant\((\d+)\)")
+
+# ops that move no HBM data on their own
+_FREE_OPS = {"parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+             "copy-start", "copy-done", "after-all", "partition-id",
+             "replica-id", "custom-call", "bitcast-convert", "iota",
+             "get-dimension-size", "opt-barrier"}
+
+
+def _shape_bytes_of(type_str: str) -> int:
+    """Bytes of a (possibly tuple) HLO type string."""
+    total = 0
+    for dt, dims in re.findall(r"(\w+)\[([\d,]*)\]", type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+class Computation:
+    def __init__(self, name: str):
+        self.name = name
+        self.shapes: dict[str, str] = {}       # var -> full type string
+        self.ops: list[dict] = []              # parsed op records
+
+
+def parse(hlo: str):
+    comps: dict[str, Computation] = {}
+    entry = None
+    cur: Computation | None = None
+    for raw in hlo.splitlines():
+        line = raw.strip()
+        hdr = _COMP_HDR.match(line)
+        if hdr and raw.rstrip().endswith("{") and " -> " in line:
+            cur = Computation(hdr.group(2))
+            comps[cur.name] = cur
+            if hdr.group(1):
+                entry = cur.name
+            continue
+        if cur is None:
+            continue
+        if line == "}":
+            cur = None
+            continue
+        d = _DEF_RE.match(line)
+        if not d:
+            continue
+        var, rhs = d.group(1), d.group(2)
+        # result type = leading type token(s) of rhs
+        tm = re.match(r"^(\([^)]*\)|\w+\[[\d,]*\]\S*)", rhs)
+        rtype = tm.group(1) if tm else ""
+        cur.shapes[var] = rtype
+        om = re.match(r"^(?:\([^)]*\)|\w+\[[\d,]*\]\S*)?\s*([\w\-]+)", rhs)
+        opname = om.group(1) if om else ""
+        # operand names: inside the first (...) after the op name
+        args_m = re.search(re.escape(opname) + r"\(([^)]*)\)", rhs) if opname else None
+        operands = []
+        if args_m:
+            operands = [n for n in _NAME_TOK.findall(args_m.group(1))
+                        if n in cur.shapes or not n.isdigit()]
+        cur.ops.append({"var": var, "op": opname, "rhs": rhs,
+                        "operands": operands, "rtype": rtype})
+    return comps, entry
+
+
+def _trip_count(cond: Computation) -> int | None:
+    best = None
+    for op in cond.ops:
+        for c in _CONST_RE.findall(op["rhs"]):
+            v = int(c)
+            best = v if best is None else max(best, v)
+    return best
+
+
+def _dot_flops(op, comp: Computation) -> float:
+    out_elems = _shape_bytes_of(op["rtype"])
+    # element count, not bytes:
+    m = _SHAPE_TOK.match(op["rtype"])
+    if not m:
+        return 0.0
+    n = 1
+    for d in m.group(2).split(","):
+        if d:
+            n *= int(d)
+    k = 1
+    cm = re.search(r"rhs_contracting_dims=\{([\d,]*)\}", op["rhs"])
+    if cm and len(op["operands"]) >= 2:
+        rhs_name = op["operands"][1]
+        rt = comp.shapes.get(rhs_name, "")
+        sm = _SHAPE_TOK.match(rt)
+        if sm:
+            dims = [int(d) for d in sm.group(2).split(",") if d]
+            for ci in cm.group(1).split(","):
+                if ci and int(ci) < len(dims):
+                    k *= dims[int(ci)]
+    del out_elems
+    return 2.0 * n * k
+
+
+def analyze(hlo: str) -> dict:
+    """Returns {"flops", "bytes", "collectives": {kind: bytes, "total"},
+    "trip_count_unknown"?} — all trip-count corrected, per device."""
+    comps, entry = parse(hlo)
+    unknown = [False]
+    cache: dict[str, tuple] = {}
+
+    def walk(name: str):
+        if name in cache:
+            return cache[name]
+        comp = comps[name]
+        flops = 0.0
+        mem = 0.0
+        coll: dict[str, float] = defaultdict(float)
+        for op in comp.ops:
+            kind = op["op"]
+            base = kind.replace("-start", "")
+            # --- collectives ---
+            if base in _COLLECTIVES and not kind.endswith("-done"):
+                nbytes = _shape_bytes_of(op["rtype"])
+                if base == "reduce-scatter":
+                    g = re.search(r"replica_groups=\{\{([\d,]+)\}", op["rhs"])
+                    if g:
+                        nbytes *= len(g.group(1).split(","))
+                coll[base] += nbytes
+                mem += _shape_bytes_of(op["rtype"])
+                continue
+            # --- while loops ---
+            if kind == "while":
+                body_m = re.search(r"body=%?([\w.\-]+)", op["rhs"])
+                cond_m = re.search(r"condition=%?([\w.\-]+)", op["rhs"])
+                mult = None
+                if cond_m and cond_m.group(1) in comps:
+                    mult = _trip_count(comps[cond_m.group(1)])
+                if mult is None:
+                    mult = 1
+                    unknown[0] = True
+                if body_m and body_m.group(1) in comps:
+                    f, b, c = walk(body_m.group(1))
+                    flops += f * mult
+                    mem += b * mult
+                    for k2, v in c.items():
+                        coll[k2] += v * mult
+                continue
+            # --- calls / conditionals / fusions ---
+            callees = []
+            for pat in (r"to_apply=%?([\w.\-]+)",
+                        r"(?:true_computation|false_computation)=%?([\w.\-]+)",
+                        r"calls=%?([\w.\-]+)",
+                        r"branch_computations=\{([^}]*)\}"):
+                for m in re.finditer(pat, op["rhs"]):
+                    callees += _NAME_TOK.findall(m.group(1))
+            if kind == "fusion":
+                # fusion: count dot flops inside, memory at the boundary
+                fc = re.search(r"calls=%?([\w.\-]+)", op["rhs"])
+                if fc and fc.group(1) in comps:
+                    f, _, c = walk(fc.group(1))
+                    flops += f
+                    for k2, v in c.items():
+                        coll[k2] += v
+                mem += _shape_bytes_of(op["rtype"])
+                for o in op["operands"]:
+                    mem += _shape_bytes_of(comp.shapes.get(o, ""))
+                continue
+            for callee in callees:
+                if callee in comps and callee != name:
+                    f, b, c = walk(callee)
+                    flops += f
+                    mem += b
+                    for k2, v in c.items():
+                        coll[k2] += v
+            # --- dots ---
+            if kind in ("dot", "convolution"):
+                flops += _dot_flops(op, comp)
+            # --- memory ---
+            if kind in ("dynamic-slice", "gather", "slice"):
+                mem += 2 * _shape_bytes_of(op["rtype"])   # read slice + write
+            elif kind in ("dynamic-update-slice", "scatter"):
+                upd = (_shape_bytes_of(comp.shapes.get(op["operands"][1], ""))
+                       if len(op["operands"]) > 1 else 0)
+                mem += 2 * upd                            # read + write update
+            elif kind not in _FREE_OPS and kind != "while":
+                mem += _shape_bytes_of(op["rtype"])
+                for o in op["operands"]:
+                    mem += _shape_bytes_of(comp.shapes.get(o, ""))
+        cache[name] = (flops, mem, dict(coll))
+        return cache[name]
+
+    if entry is None:
+        return {"flops": 0.0, "bytes": 0.0, "collectives": {"total": 0.0}}
+    flops, mem, coll = walk(entry)
+    out_coll = dict(coll)
+    out_coll["total"] = float(sum(coll.values()))
+    rec = {"flops": flops, "bytes": mem, "collectives": out_coll}
+    if unknown[0]:
+        rec["trip_count_unknown"] = True
+    return rec

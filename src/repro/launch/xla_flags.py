@@ -1,0 +1,27 @@
+"""Production XLA flags for TPU jobs (compute/communication overlap).
+
+These are applied by the real-cluster launcher (they are TPU-backend flags;
+the CPU dry-run ignores them).  They enable the latency-hiding scheduler and
+async collective fusion so the per-layer TP/SP collectives emitted by our
+sharding constraints overlap with the surrounding matmuls — the automatic
+counterpart of parallel/collective_matmul.py.
+"""
+
+TPU_PERF_FLAGS = " ".join([
+    "--xla_tpu_enable_async_collective_fusion=true",
+    "--xla_tpu_enable_async_collective_fusion_fuse_all_gather=true",
+    "--xla_tpu_enable_async_collective_fusion_multiple_steps=true",
+    "--xla_tpu_overlap_compute_collective_tc=true",
+    "--xla_enable_async_all_gather=true",
+    "--xla_enable_async_collective_permute=true",
+    "--xla_tpu_spmd_threshold_for_allgather_cse=10000",
+    "--xla_tpu_data_parallel_opt_different_sized_ops=true",
+])
+
+
+def apply(extra: str = ""):
+    import os
+
+    os.environ["XLA_FLAGS"] = " ".join(
+        x for x in (os.environ.get("XLA_FLAGS", ""), TPU_PERF_FLAGS, extra)
+        if x)

@@ -1,0 +1,2 @@
+"""repro.models — model zoo substrate (functional param-dict modules)."""
+from repro.models.registry import build, cache_specs, input_specs, supports_shape

@@ -1,0 +1,241 @@
+"""Attention layer: GQA / MLA projections around the NSA-FSA core.
+
+Attention kinds (cfg.attention): "nsa" (paper technique), "full", "swa".
+
+MLA (DeepSeek-V2) is implemented in *absorbed* form: attention runs in the
+512-d latent space with a single shared KV head (q/k = latent ⊕ decoupled
+RoPE part, v = latent), and the per-head value up-projection W_uv is applied
+to the attention output.  This is mathematically identical to materialising
+the 16 KV heads (associativity of the matmuls) and lets NSA's compression /
+selection / sliding machinery — and the FSA kernels — operate on the latent
+cache directly, which is also the correct decode-time layout.  See DESIGN.md
+§Arch-applicability.
+
+Decode keeps a raw KV cache plus incrementally-updated NSA compression
+caches, so per-token cost stays O(N/stride + T·B_K + W).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import attention as core_attn
+from repro.core import compression, gating, sparse
+from repro.models.layers import apply_rope, dense_init, rms_norm
+from repro.parallel.axes import shard
+
+
+# ------------------------------------------------------------------ params
+def init_attention(key, cfg) -> dict:
+    d, h, hk, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.hd()
+    dtype = jnp.dtype(cfg.dtype)
+    ks = jax.random.split(key, 8)
+    p = {}
+    if cfg.mla is not None:
+        m = cfg.mla
+        dk_lat = m.kv_lora + m.rope_dim
+        p["w_q"] = dense_init(ks[0], (d, h * (m.nope_dim + m.rope_dim)), dtype)
+        p["w_dkv"] = dense_init(ks[1], (d, m.kv_lora), dtype)
+        p["kv_norm"] = jnp.zeros((m.kv_lora,), dtype)
+        p["w_kr"] = dense_init(ks[2], (d, m.rope_dim), dtype)
+        # absorbed projections: q->latent (per head), latent->value head
+        p["w_uk"] = dense_init(ks[3], (h, m.nope_dim, m.kv_lora), dtype)
+        p["w_uv"] = dense_init(ks[4], (h, m.kv_lora, hd), dtype)
+        p["w_o"] = dense_init(ks[5], (h * hd, d), dtype)
+        attn_dk, attn_dv, attn_hk = dk_lat, m.kv_lora, 1
+    else:
+        p["w_q"] = dense_init(ks[0], (d, h * hd), dtype)
+        p["w_k"] = dense_init(ks[1], (d, hk * hd), dtype)
+        p["w_v"] = dense_init(ks[2], (d, hk * hd), dtype)
+        p["w_o"] = dense_init(ks[3], (h * hd, d), dtype)
+        if cfg.use_qkv_bias:
+            p["b_q"] = jnp.zeros((h * hd,), dtype)
+            p["b_k"] = jnp.zeros((hk * hd,), dtype)
+            p["b_v"] = jnp.zeros((hk * hd,), dtype)
+        attn_dk, attn_dv, attn_hk = hd, hd, hk
+    if cfg.attention == "nsa":
+        p["nsa"] = {
+            **compression.init_compression_params(ks[6], cfg.nsa, attn_dk,
+                                                  attn_dv, dtype),
+            **gating.init_gate_params(ks[7], d, h, dtype),
+        }
+    del attn_hk
+    return p
+
+
+# -------------------------------------------------------------- projections
+def _qkv(p, x, cfg, pos):
+    """x: (B,S,D) -> q (B,S,h,dk), k (B,S,h_k,dk), v (B,S,h_k,dv)."""
+    b, s, _ = x.shape
+    h, hd = cfg.n_heads, cfg.hd()
+    if cfg.mla is not None:
+        m = cfg.mla
+        c_kv = rms_norm(x @ p["w_dkv"], p["kv_norm"], cfg.norm_eps)   # (B,S,L)
+        k_rope = apply_rope(
+            (x @ p["w_kr"])[:, :, None, :], pos, cfg.rope_theta)      # (B,S,1,r)
+        q = (x @ p["w_q"]).reshape(b, s, h, m.nope_dim + m.rope_dim)
+        q_nope, q_rope = q[..., :m.nope_dim], q[..., m.nope_dim:]
+        q_rope = apply_rope(q_rope, pos, cfg.rope_theta)
+        q_lat = jnp.einsum("bshn,hnl->bshl", q_nope, p["w_uk"])       # absorbed
+        q_full = jnp.concatenate([q_lat, q_rope], axis=-1)            # (B,S,h,L+r)
+        k_full = jnp.concatenate([c_kv[:, :, None, :], k_rope], axis=-1)
+        return q_full, k_full, c_kv[:, :, None, :]
+    hk = cfg.n_kv_heads
+    q = x @ p["w_q"] + (p.get("b_q", 0))
+    k = x @ p["w_k"] + (p.get("b_k", 0))
+    v = x @ p["w_v"] + (p.get("b_v", 0))
+    q = apply_rope(q.reshape(b, s, h, hd), pos, cfg.rope_theta)
+    k = apply_rope(k.reshape(b, s, hk, hd), pos, cfg.rope_theta)
+    return q, k, v.reshape(b, s, hk, hd)
+
+
+def _out_proj(p, o, cfg):
+    """o: (B,S,h,dv_attn) -> (B,S,D)."""
+    b, s = o.shape[:2]
+    if cfg.mla is not None:
+        o = jnp.einsum("bshl,hld->bshd", o, p["w_uv"])
+    return o.reshape(b, s, -1) @ p["w_o"]
+
+
+# ------------------------------------------------------------ full-sequence
+def attention_forward(p, x, cfg, *, causal: bool = True):
+    """Training / prefill attention over a full sequence. x: (B,S,D)."""
+    b, s, _ = x.shape
+    pos = jnp.broadcast_to(jnp.arange(s), (b, s))
+    q, k, v = _qkv(p, x, cfg, pos)
+    q = shard(q, "batch", "seq", "heads")
+    k = shard(k, "batch", "seq", "kv_heads")
+    v = shard(v, "batch", "seq", "kv_heads")
+
+    if cfg.attention == "nsa" and causal:
+        gates = gating.apply_gates(p["nsa"], x)
+        fn = lambda q1, k1, v1, g1: core_attn.nsa_attention(
+            p["nsa"], g1, q1, k1, v1, cfg.nsa, impl=cfg.attn_impl,
+            q_chunk=cfg.q_chunk)
+        o = jax.vmap(fn)(q, k, v, gates)
+    elif cfg.attention == "swa" and causal:
+        from repro.kernels import ref as kref
+        fn = lambda q1, k1, v1: kref.flash_ref_chunked(
+            q1, k1, v1, causal=True, window=cfg.swa_window, q_chunk=cfg.q_chunk)
+        o = jax.vmap(fn)(q, k, v)
+    else:
+        from repro.kernels import ref as kref
+        fn = lambda q1, k1, v1: kref.flash_ref_chunked(
+            q1, k1, v1, causal=causal, q_chunk=cfg.q_chunk)
+        o = jax.vmap(fn)(q, k, v)
+    o = shard(o, "batch", "seq", "heads")
+    return _out_proj(p, o, cfg)
+
+
+def cross_attention_forward(p, x, kv_x, cfg):
+    """Encoder-decoder cross attention (full, non-causal). kv_x: (B,Senc,D)."""
+    b, s, _ = x.shape
+    pos = jnp.zeros((b, s), jnp.int32)      # no rope on cross attention
+    h, hd, hk = cfg.n_heads, cfg.hd(), cfg.n_kv_heads
+    q = (x @ p["w_q"]).reshape(b, s, h, hd)
+    k = (kv_x @ p["w_k"]).reshape(b, kv_x.shape[1], hk, hd)
+    v = (kv_x @ p["w_v"]).reshape(b, kv_x.shape[1], hk, hd)
+    from repro.kernels import ref as kref
+    o = jax.vmap(lambda a, b_, c: kref.flash_ref_chunked(a, b_, c, causal=False,
+                                                         q_chunk=cfg.q_chunk))(q, k, v)
+    return o.reshape(b, s, -1) @ p["w_o"]
+
+
+# ------------------------------------------------------------------ decode
+def init_attn_cache(cfg, batch: int, max_len: int):
+    dtype = jnp.dtype(cfg.dtype)
+    if cfg.mla is not None:
+        dk = cfg.mla.kv_lora + cfg.mla.rope_dim
+        dv, hk = cfg.mla.kv_lora, 1
+    else:
+        dk = dv = cfg.hd()
+        hk = cfg.n_kv_heads
+    cache = {
+        "k": jnp.zeros((batch, max_len, hk, dk), dtype),
+        "v": jnp.zeros((batch, max_len, hk, dv), dtype),
+    }
+    if cfg.attention == "nsa":
+        n_cmp = cfg.nsa.num_cmp_blocks(max_len)
+        cache["cmp_k"] = jnp.zeros((batch, n_cmp, hk, dk), dtype)
+        cache["cmp_v"] = jnp.zeros((batch, n_cmp, hk, dv), dtype)
+    return cache
+
+
+def attention_prefill(p, x, cfg, cache):
+    """Run full-seq attention and populate the decode cache. x: (B,S,D)."""
+    b, s, _ = x.shape
+    pos = jnp.broadcast_to(jnp.arange(s), (b, s))
+    _, k, v = _qkv(p, x, cfg, pos)
+    y = attention_forward(p, x, cfg)
+    cache = dict(cache)
+    cache["k"] = jax.lax.dynamic_update_slice_in_dim(cache["k"], k.astype(cache["k"].dtype), 0, 1)
+    cache["v"] = jax.lax.dynamic_update_slice_in_dim(cache["v"], v.astype(cache["v"].dtype), 0, 1)
+    if cfg.attention == "nsa":
+        ck, cv = jax.vmap(lambda k1, v1: compression.compress_kv(p["nsa"], k1, v1, cfg.nsa))(k, v)
+        n = min(ck.shape[1], cache["cmp_k"].shape[1])
+        cache["cmp_k"] = cache["cmp_k"].at[:, :n].set(ck[:, :n].astype(cache["cmp_k"].dtype))
+        cache["cmp_v"] = cache["cmp_v"].at[:, :n].set(cv[:, :n].astype(cache["cmp_v"].dtype))
+    return y, cache
+
+
+def _update_cmp_cache(p, cfg, cache, pos):
+    """Emit the newest compression token if a stride boundary was crossed."""
+    nsa = cfg.nsa
+    l, st = nsa.cmp_block_size, nsa.cmp_stride
+    new_len = pos + 1
+    has_new = (new_len >= l) & ((new_len - l) % st == 0)
+    j = jnp.maximum((new_len - l) // st, 0)              # cmp token index
+    start = j * st
+
+    def emit(cache):
+        win_k = jax.lax.dynamic_slice_in_dim(cache["k"], start, l, axis=1)
+        win_v = jax.lax.dynamic_slice_in_dim(cache["v"], start, l, axis=1)
+        ck, cv = jax.vmap(lambda k1, v1: compression.compress_kv(p["nsa"], k1, v1,
+                    dataclasses.replace(nsa, cmp_block_size=l, cmp_stride=l)))(win_k, win_v)
+        cache = dict(cache)
+        cache["cmp_k"] = jax.lax.dynamic_update_slice(
+            cache["cmp_k"], ck.astype(cache["cmp_k"].dtype), (0, j, 0, 0))
+        cache["cmp_v"] = jax.lax.dynamic_update_slice(
+            cache["cmp_v"], cv.astype(cache["cmp_v"].dtype), (0, j, 0, 0))
+        return cache
+
+    return jax.lax.cond(has_new, emit, lambda c: dict(c), cache)
+
+
+def attention_decode(p, x_t, cache, pos, cfg):
+    """One decode step. x_t: (B,D); pos: scalar absolute position."""
+    b = x_t.shape[0]
+    x1 = x_t[:, None, :]
+    pos_b = jnp.broadcast_to(pos, (b, 1))
+    q, k, v = _qkv(p, x1, cfg, pos_b)                    # (B,1,h,dk) ...
+    cache = dict(cache)
+    cache["k"] = jax.lax.dynamic_update_slice(
+        cache["k"], k.astype(cache["k"].dtype), (0, pos, 0, 0))
+    cache["v"] = jax.lax.dynamic_update_slice(
+        cache["v"], v.astype(cache["v"].dtype), (0, pos, 0, 0))
+
+    if cfg.attention == "nsa":
+        cache = _update_cmp_cache(p, cfg, cache, pos)
+        gates = gating.apply_gates(p["nsa"], x_t)        # (B,h,3)
+        fn = lambda q1, kc, vc, ck, cv, g1: sparse.nsa_decode_step(
+            p["nsa"], g1, q1, kc, vc, ck, cv, pos, cfg.nsa)
+        o = jax.vmap(fn)(q[:, 0], cache["k"], cache["v"],
+                         cache["cmp_k"], cache["cmp_v"], gates)
+    else:
+        window = cfg.swa_window if cfg.attention == "swa" else None
+        span = cache["k"].shape[1]
+        key_pos = jnp.arange(span)
+        mask = key_pos <= pos
+        if window is not None:
+            mask &= key_pos > pos - window
+        from repro.core.reference import _gqa_out, _gqa_scores, _safe_softmax
+        def fn(q1, kc, vc):
+            scores = _gqa_scores(q1, kc)
+            probs, _ = _safe_softmax(scores, mask[None, None, :])
+            return _gqa_out(probs, vc).astype(q1.dtype)
+        o = jax.vmap(fn)(q[:, 0:1], cache["k"], cache["v"])
+        o = o[:, 0]
+    o = o.reshape(b, 1, cfg.n_heads, -1)
+    return _out_proj(p, o, cfg)[:, 0], cache

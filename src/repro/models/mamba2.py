@@ -1,0 +1,182 @@
+"""Mamba2 block (State Space Duality), attention-free sequence mixer.
+
+Training/prefill uses the chunked SSD algorithm (quadratic only within a
+chunk, linear across chunks via a state-passing scan); decode is the O(1)
+recurrent update.  The paper's NSA technique is inapplicable here (no
+attention); see DESIGN.md §Arch-applicability.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense_init, rms_norm
+from repro.parallel.axes import shard
+
+
+def _dims(cfg):
+    s = cfg.ssm
+    d_inner = s.expand * cfg.d_model
+    n_heads = d_inner // s.head_dim
+    conv_dim = d_inner + 2 * s.n_groups * s.d_state
+    return d_inner, n_heads, conv_dim
+
+
+def init_mamba(key, cfg) -> dict:
+    s = cfg.ssm
+    d_inner, n_heads, conv_dim = _dims(cfg)
+    dtype = jnp.dtype(cfg.dtype)
+    ks = jax.random.split(key, 4)
+    d_in_proj = 2 * d_inner + 2 * s.n_groups * s.d_state + n_heads
+    return {
+        "w_in": dense_init(ks[0], (cfg.d_model, d_in_proj), dtype),
+        "conv_w": dense_init(ks[1], (s.d_conv, conv_dim), dtype, scale=0.5),
+        "conv_b": jnp.zeros((conv_dim,), dtype),
+        "A_log": jnp.zeros((n_heads,), jnp.float32),
+        "D": jnp.ones((n_heads,), jnp.float32),
+        "dt_bias": jnp.zeros((n_heads,), jnp.float32),
+        "norm": jnp.zeros((d_inner,), dtype),
+        "w_out": dense_init(ks[2], (d_inner, cfg.d_model), dtype),
+    }
+
+
+def _split_proj(zxbcdt, cfg):
+    s = cfg.ssm
+    d_inner, n_heads, _ = _dims(cfg)
+    gn = s.n_groups * s.d_state
+    z, xc, bc, cc, dt = jnp.split(
+        zxbcdt, [d_inner, 2 * d_inner, 2 * d_inner + gn, 2 * d_inner + 2 * gn],
+        axis=-1)
+    return z, xc, bc, cc, dt
+
+
+def _causal_conv(u, w, b, conv_state=None):
+    """Depthwise causal conv. u: (B,L,C), w: (K,C). conv_state: (B,K-1,C)."""
+    k = w.shape[0]
+    if conv_state is None:
+        pad = jnp.zeros((u.shape[0], k - 1, u.shape[2]), u.dtype)
+    else:
+        pad = conv_state.astype(u.dtype)
+    up = jnp.concatenate([pad, u], axis=1)
+    out = sum(up[:, i:i + u.shape[1]] * w[i] for i in range(k))
+    return jax.nn.silu(out + b), up[:, -(k - 1):]
+
+
+def ssd_chunked(x, dt, a, b_, c_, chunk: int):
+    """SSD scan. x: (B,L,H,P); dt: (B,L,H); a: (H,) (negative);
+    b_/c_: (B,L,H,N).  Returns (y, final_state (B,H,P,N))."""
+    bsz, l, h, p = x.shape
+    n = b_.shape[-1]
+    q = min(chunk, l)
+    pad = (q - l % q) % q
+    if pad:
+        x, dt = (jnp.pad(t, ((0, 0), (0, pad)) + ((0, 0),) * (t.ndim - 2))
+                 for t in (x, dt))
+        b_ = jnp.pad(b_, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        c_ = jnp.pad(c_, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    nc = (l + pad) // q
+
+    xc = x.reshape(bsz, nc, q, h, p)
+    dtc = dt.reshape(bsz, nc, q, h).astype(jnp.float32)
+    bcc = b_.reshape(bsz, nc, q, h, n).astype(jnp.float32)
+    ccc = c_.reshape(bsz, nc, q, h, n).astype(jnp.float32)
+
+    da = dtc * a                                              # (B,nc,Q,H)
+    da_cs = jnp.cumsum(da, axis=2)
+    # --- intra-chunk (masked quadratic) ---
+    seg = da_cs[:, :, :, None, :] - da_cs[:, :, None, :, :]   # (B,nc,Qi,Qj,H)
+    iq = jnp.arange(q)
+    causal = iq[:, None] >= iq[None, :]
+    decay = jnp.where(causal[None, None, :, :, None], jnp.exp(seg), 0.0)
+    scores = jnp.einsum("bcihn,bcjhn->bcijh", ccc, bcc)
+    w = scores * decay * dtc[:, :, None, :, :]
+    y_diag = jnp.einsum("bcijh,bcjhp->bcihp", w,
+                        xc.astype(jnp.float32))
+
+    # --- chunk states + inter-chunk recurrence ---
+    tail = da_cs[:, :, -1:, :] - da_cs                        # (B,nc,Q,H)
+    states = jnp.einsum("bcjh,bcjhn,bcjhp->bchpn",
+                        jnp.exp(tail) * dtc, bcc, xc.astype(jnp.float32))
+    chunk_decay = jnp.exp(da_cs[:, :, -1, :])                 # (B,nc,H)
+
+    def scan_fn(carry, inp):
+        st, dec = inp
+        new = carry * dec[:, :, None, None] + st
+        return new, carry                                     # emit state BEFORE chunk
+
+    init = jnp.zeros((bsz, h, p, n), jnp.float32)
+    final, prev_states = jax.lax.scan(
+        scan_fn, init,
+        (states.transpose(1, 0, 2, 3, 4), chunk_decay.transpose(1, 0, 2)))
+    prev_states = prev_states.transpose(1, 0, 2, 3, 4)        # (B,nc,H,P,N)
+
+    y_off = jnp.einsum("bcihn,bchpn,bcih->bcihp", ccc, prev_states,
+                       jnp.exp(da_cs))
+    y = (y_diag + y_off).reshape(bsz, nc * q, h, p)[:, :l]
+    return y.astype(x.dtype), final
+
+
+def mamba_forward(p, x, cfg, conv_state=None, ssm_state=None):
+    """Full-sequence Mamba2. x: (B,L,D) -> (y, (conv_state, ssm_state))."""
+    s = cfg.ssm
+    d_inner, n_heads, _ = _dims(cfg)
+    z, xc, bc, cc, dt = _split_proj(x @ p["w_in"], cfg)
+    conv_in = jnp.concatenate([xc, bc, cc], axis=-1)
+    conv_out, conv_state = _causal_conv(conv_in, p["conv_w"], p["conv_b"],
+                                        conv_state)
+    xc, bc, cc = jnp.split(conv_out, [d_inner, d_inner + s.n_groups * s.d_state],
+                           axis=-1)
+    bsz, l = x.shape[:2]
+    h_per_g = n_heads // s.n_groups
+    xh = xc.reshape(bsz, l, n_heads, s.head_dim)
+    xh = shard(xh, "batch", "seq", "heads")
+    bh = jnp.repeat(bc.reshape(bsz, l, s.n_groups, s.d_state), h_per_g, axis=2)
+    ch = jnp.repeat(cc.reshape(bsz, l, s.n_groups, s.d_state), h_per_g, axis=2)
+    dt_sp = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+    a = -jnp.exp(p["A_log"])
+
+    y, final = ssd_chunked(xh, dt_sp, a, bh, ch, s.chunk)
+    y = y + p["D"].astype(y.dtype)[None, None, :, None] * xh
+    y = y.reshape(bsz, l, d_inner)
+    y = rms_norm(y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype),
+                 p["norm"], cfg.norm_eps)
+    return y @ p["w_out"], (conv_state, final)
+
+
+def mamba_decode_step(p, x_t, conv_state, ssm_state, cfg):
+    """One-token recurrent update. x_t: (B,D); ssm_state: (B,H,P,N)."""
+    s = cfg.ssm
+    d_inner, n_heads, conv_dim = _dims(cfg)
+    z, xc, bc, cc, dt = _split_proj(x_t @ p["w_in"], cfg)
+    conv_in = jnp.concatenate([xc, bc, cc], axis=-1)[:, None, :]   # (B,1,C)
+    window = jnp.concatenate([conv_state.astype(conv_in.dtype), conv_in], axis=1)
+    conv_out = jax.nn.silu(
+        (window * p["conv_w"][None]).sum(1) + p["conv_b"])         # (B,C)
+    conv_state = window[:, 1:]
+    xc, bc, cc = jnp.split(conv_out, [d_inner, d_inner + s.n_groups * s.d_state],
+                           axis=-1)
+    bsz = x_t.shape[0]
+    h_per_g = n_heads // s.n_groups
+    xh = xc.reshape(bsz, n_heads, s.head_dim).astype(jnp.float32)
+    bh = jnp.repeat(bc.reshape(bsz, s.n_groups, s.d_state), h_per_g, axis=1)
+    ch = jnp.repeat(cc.reshape(bsz, s.n_groups, s.d_state), h_per_g, axis=1)
+    dt_sp = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])  # (B,H)
+    a = -jnp.exp(p["A_log"])
+    decay = jnp.exp(dt_sp * a)                                      # (B,H)
+    ssm_state = (ssm_state * decay[:, :, None, None]
+                 + jnp.einsum("bh,bhn,bhp->bhpn", dt_sp, bh.astype(jnp.float32), xh))
+    y = jnp.einsum("bhn,bhpn->bhp", ch.astype(jnp.float32), ssm_state)
+    y = y + p["D"][None, :, None] * xh
+    y = y.reshape(bsz, d_inner).astype(x_t.dtype)
+    y = rms_norm(y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype),
+                 p["norm"], cfg.norm_eps)
+    return y @ p["w_out"], conv_state, ssm_state
+
+
+def init_mamba_cache(cfg, batch: int):
+    s = cfg.ssm
+    d_inner, n_heads, conv_dim = _dims(cfg)
+    return {
+        "conv": jnp.zeros((batch, s.d_conv - 1, conv_dim), jnp.dtype(cfg.dtype)),
+        "ssm": jnp.zeros((batch, n_heads, s.head_dim, s.d_state), jnp.float32),
+    }

@@ -1,0 +1,109 @@
+"""Uniform model API over all families + ShapeDtypeStruct input specs.
+
+``build(cfg)`` returns a Model namespace:
+    init(key)                      -> params
+    loss(params, batch)            -> (scalar, metrics)     [train]
+    prefill(params, cache, batch)  -> (last logits, cache)  [serving]
+    decode_step(params, cache, tokens, pos) -> (logits, cache)
+    init_cache(batch, max_len)     -> cache
+
+``input_specs(cfg, shape)`` returns the ShapeDtypeStruct stand-ins used by
+the multi-pod dry-run (weak-type-correct, no allocation); modality frontends
+are stubs — precomputed frame/patch embeddings per the assignment.
+"""
+from __future__ import annotations
+
+import dataclasses
+from types import SimpleNamespace
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models import transformer, whisper
+
+
+def build(cfg: ModelConfig) -> SimpleNamespace:
+    if cfg.family == "encdec":
+        return SimpleNamespace(
+            cfg=cfg,
+            init=lambda key: whisper.init_whisper(key, cfg),
+            loss=lambda p, b: whisper.whisper_loss(p, b, cfg),
+            logits=lambda p, b: None,
+            prefill=lambda p, c, b: whisper.whisper_prefill(p, c, b, cfg),
+            decode_step=lambda p, c, t, pos: whisper.whisper_decode_step(
+                p, c, t, pos, cfg),
+            init_cache=lambda batch, max_len: whisper.init_whisper_cache(
+                cfg, batch, max_len),
+        )
+    return SimpleNamespace(
+        cfg=cfg,
+        init=lambda key: transformer.init_lm(key, cfg),
+        loss=lambda p, b: transformer.lm_loss(p, b, cfg),
+        logits=lambda p, b: transformer.lm_logits(p, b, cfg),
+        prefill=lambda p, c, b: transformer.lm_prefill(p, c, b, cfg),
+        decode_step=lambda p, c, t, pos: transformer.lm_decode_step(
+            p, c, t, pos, cfg),
+        init_cache=lambda batch, max_len: transformer.init_lm_cache(
+            cfg, batch, max_len),
+    )
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig, *,
+                per_device_batch: int | None = None) -> dict:
+    """ShapeDtypeStruct stand-ins for every model input of this cell."""
+    b = per_device_batch or shape.global_batch
+    s = shape.seq_len
+    i32 = jnp.int32
+    act = jnp.dtype(cfg.dtype)
+
+    if shape.mode in ("train", "prefill"):
+        batch = {
+            "tokens": jax.ShapeDtypeStruct((b, s), i32),
+            "labels": jax.ShapeDtypeStruct((b, s), i32),
+        }
+        if cfg.family == "vlm":
+            batch["img_embeds"] = jax.ShapeDtypeStruct(
+                (b, cfg.n_img_tokens, cfg.d_model), act)
+        if cfg.family == "encdec":
+            batch["frames"] = jax.ShapeDtypeStruct((b, cfg.enc_seq, cfg.d_model), act)
+        return batch
+    # decode: one new token against a seq_len-deep KV cache
+    return {
+        "tokens": jax.ShapeDtypeStruct((b,), i32),
+        "pos": jax.ShapeDtypeStruct((), i32),
+    }
+
+
+def cache_specs(cfg: ModelConfig, shape: ShapeConfig, *,
+                per_device_batch: int | None = None):
+    """ShapeDtypeStructs for the decode cache at this shape."""
+    b = per_device_batch or shape.global_batch
+    model = build(cfg)
+    return jax.eval_shape(lambda: model.init_cache(b, shape.seq_len))
+
+
+def supports_shape(cfg: ModelConfig, shape: ShapeConfig) -> tuple[bool, str]:
+    """Cell applicability (DESIGN.md §Arch-applicability)."""
+    if shape.name == "long_500k":
+        if cfg.family == "encdec":
+            return False, "whisper: audio context bound by conv-frontend stub"
+        if cfg.attention == "full" and cfg.family not in ("ssm", "hybrid"):
+            return False, "pure full-attention arch: quadratic at 500k"
+    return True, ""
+
+
+def make_reduced_batch(cfg: ModelConfig, key, batch: int, seq: int) -> dict:
+    """Concrete random batch for CPU smoke tests."""
+    ks = jax.random.split(key, 3)
+    toks = jax.random.randint(ks[0], (batch, seq), 0, cfg.vocab)
+    labels = jnp.concatenate(
+        [toks[:, 1:], jnp.full((batch, 1), -100, toks.dtype)], axis=1)
+    out = {"tokens": toks, "labels": labels}
+    if cfg.family == "vlm":
+        out["img_embeds"] = jax.random.normal(
+            ks[1], (batch, cfg.n_img_tokens, cfg.d_model), jnp.dtype(cfg.dtype))
+    if cfg.family == "encdec":
+        out["frames"] = jax.random.normal(
+            ks[2], (batch, cfg.enc_seq, cfg.d_model), jnp.dtype(cfg.dtype))
+    return out

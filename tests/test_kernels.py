@@ -1,0 +1,135 @@
+"""Kernel sweeps: every Pallas kernel vs its pure-jnp oracle (interpret mode).
+
+Sweeps shapes (incl. ragged N), dtypes, GQA group sizes, block sizes, dk!=dv.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import NSAConfig
+from repro.core.selection import select_blocks
+from repro.kernels import ops, ref
+
+
+def make_inputs(key, n, h, h_k, dk, dv, t_sel, b_k, dtype):
+    ks = jax.random.split(key, 4)
+    q = jax.random.normal(ks[0], (n, h, dk), dtype)
+    k = jax.random.normal(ks[1], (n, h_k, dk), dtype)
+    v = jax.random.normal(ks[2], (n, h_k, dv), dtype)
+    # random causal selection (always includes the current block)
+    b = (n + b_k - 1) // b_k
+    scores = jax.random.uniform(ks[3], (n, h_k, b))
+    cfg = NSAConfig(block_size=b_k, num_selected=t_sel, cmp_block_size=8,
+                    cmp_stride=4, window_size=32, q_block_size=32,
+                    num_init_blocks=1, num_local_blocks=1,
+                    min_seq_for_sparse=1)
+    idx, valid = select_blocks(scores, jnp.arange(n), cfg, n)
+    return q, k, v, idx, valid, cfg
+
+
+KERNELS = ["fsa", "fsa_faithful", "nsa"]
+
+
+@pytest.mark.parametrize("kernel", KERNELS)
+@pytest.mark.parametrize("n,g,h_k", [(64, 1, 2), (96, 2, 2), (128, 4, 1)])
+def test_selected_kernel_shapes(kernel, n, g, h_k):
+    q, k, v, idx, valid, cfg = make_inputs(
+        jax.random.PRNGKey(0), n, g * h_k, h_k, 32, 32, 4, 16, jnp.float32)
+    cfg = NSAConfig(**{**cfg.__dict__, "kernel": kernel})
+    out = ops.selected_attention(q, k, v, idx, valid, cfg)
+    oracle = ref.selected_ref(q, k, v, idx, valid, cfg)
+    np.testing.assert_allclose(out, oracle, atol=2e-5, rtol=2e-5)
+
+
+@pytest.mark.parametrize("kernel", KERNELS)
+def test_selected_kernel_dk_ne_dv(kernel):
+    q, k, v, idx, valid, cfg = make_inputs(
+        jax.random.PRNGKey(1), 64, 4, 2, 24, 16, 3, 16, jnp.float32)
+    cfg = NSAConfig(**{**cfg.__dict__, "kernel": kernel})
+    out = ops.selected_attention(q, k, v, idx, valid, cfg)
+    oracle = ref.selected_ref(q, k, v, idx, valid, cfg)
+    np.testing.assert_allclose(out, oracle, atol=2e-5, rtol=2e-5)
+
+
+@pytest.mark.parametrize("kernel", KERNELS)
+def test_selected_kernel_bf16(kernel):
+    q, k, v, idx, valid, cfg = make_inputs(
+        jax.random.PRNGKey(2), 64, 4, 2, 32, 32, 4, 16, jnp.bfloat16)
+    cfg = NSAConfig(**{**cfg.__dict__, "kernel": kernel})
+    out = ops.selected_attention(q, k, v, idx, valid, cfg)
+    oracle = ref.selected_ref(q.astype(jnp.float32), k.astype(jnp.float32),
+                              v.astype(jnp.float32), idx, valid, cfg)
+    np.testing.assert_allclose(out.astype(jnp.float32), oracle, atol=3e-2,
+                               rtol=3e-2)
+
+
+@pytest.mark.parametrize("kernel", KERNELS)
+@pytest.mark.parametrize("b_k,t_sel", [(16, 2), (32, 4)])
+def test_selected_kernel_block_sizes(kernel, b_k, t_sel):
+    q, k, v, idx, valid, cfg = make_inputs(
+        jax.random.PRNGKey(3), 128, 2, 1, 32, 32, t_sel, b_k, jnp.float32)
+    cfg = NSAConfig(**{**cfg.__dict__, "kernel": kernel})
+    out = ops.selected_attention(q, k, v, idx, valid, cfg)
+    oracle = ref.selected_ref(q, k, v, idx, valid, cfg)
+    np.testing.assert_allclose(out, oracle, atol=2e-5, rtol=2e-5)
+
+
+def test_fsa_matches_faithful_bitwise_semantics():
+    """The one-kernel TPU form and the three-kernel paper form agree."""
+    q, k, v, idx, valid, cfg = make_inputs(
+        jax.random.PRNGKey(4), 96, 4, 2, 32, 32, 4, 16, jnp.float32)
+    o1 = ops.selected_attention(q, k, v, idx, valid,
+                                NSAConfig(**{**cfg.__dict__, "kernel": "fsa"}))
+    o2 = ops.selected_attention(
+        q, k, v, idx, valid,
+        NSAConfig(**{**cfg.__dict__, "kernel": "fsa_faithful"}))
+    np.testing.assert_allclose(o1, o2, atol=1e-5, rtol=1e-5)
+
+
+@pytest.mark.parametrize("causal,window", [(True, None), (False, None),
+                                           (True, 24)])
+def test_flash_kernel(causal, window):
+    ks = jax.random.split(jax.random.PRNGKey(5), 3)
+    n, h, h_k, d = 96, 4, 2, 32
+    q = jax.random.normal(ks[0], (n, h, d))
+    k = jax.random.normal(ks[1], (n, h_k, d))
+    v = jax.random.normal(ks[2], (n, h_k, d))
+    cfg = NSAConfig(q_block_size=32)
+    if window is None:
+        out = ops.full_attention(q, k, v, cfg, causal=causal)
+    else:
+        out = ops.sliding_attention(q, k, v, window, cfg)
+    oracle = ref.flash_ref(q, k, v, causal=causal, window=window)
+    np.testing.assert_allclose(out, oracle, atol=2e-5, rtol=2e-5)
+
+
+def test_selected_gradients_match_oracle():
+    q, k, v, idx, valid, cfg = make_inputs(
+        jax.random.PRNGKey(6), 64, 2, 1, 16, 16, 3, 16, jnp.float32)
+    cfg = NSAConfig(**{**cfg.__dict__, "kernel": "fsa"})
+
+    def f(q, k, v):
+        return (ops.selected_attention(q, k, v, idx, valid, cfg) ** 2).sum()
+
+    def f_ref(q, k, v):
+        return (ref.selected_ref(q, k, v, idx, valid, cfg) ** 2).sum()
+
+    g = jax.grad(f, argnums=(0, 1, 2))(q, k, v)
+    g_ref = jax.grad(f_ref, argnums=(0, 1, 2))(q, k, v)
+    for a, b in zip(g, g_ref):
+        np.testing.assert_allclose(a, b, atol=5e-5, rtol=5e-5)
+
+
+def test_empty_selection_rows_are_zero():
+    """Tokens whose selection is entirely invalid produce zero output."""
+    n, h, h_k, d = 32, 2, 1, 16
+    ks = jax.random.split(jax.random.PRNGKey(7), 3)
+    q = jax.random.normal(ks[0], (n, h, d))
+    k = jax.random.normal(ks[1], (n, h_k, d))
+    v = jax.random.normal(ks[2], (n, h_k, d))
+    idx = jnp.zeros((n, h_k, 2), jnp.int32)
+    valid = jnp.zeros((n, h_k, 2), bool)
+    cfg = NSAConfig(block_size=16, q_block_size=16, kernel="fsa")
+    out = ops.selected_attention(q, k, v, idx, valid, cfg)
+    np.testing.assert_allclose(out, jnp.zeros_like(out), atol=1e-6)

@@ -1,0 +1,145 @@
+"""Hypothesis property tests on system invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import indexing, selection
+from repro.core.nsa_config import NSAConfig
+from repro.data.pipeline import pack_documents
+
+jax.config.update("jax_platform_name", "cpu")
+
+SETTINGS = dict(max_examples=25, deadline=None)
+
+
+@st.composite
+def selection_case(draw):
+    b_k = draw(st.sampled_from([8, 16]))
+    n_blocks = draw(st.integers(2, 8))
+    n = b_k * n_blocks
+    h_k = draw(st.integers(1, 3))
+    # T must cover the forced blocks (init + current); NSA uses T >= 3
+    t_sel = draw(st.integers(min(2, n_blocks), min(6, n_blocks)))
+    seed = draw(st.integers(0, 2**16))
+    cfg = NSAConfig(block_size=b_k, num_selected=t_sel, cmp_block_size=8,
+                    cmp_stride=4, q_block_size=b_k, num_init_blocks=1,
+                    num_local_blocks=1)
+    scores = jax.random.uniform(jax.random.PRNGKey(seed), (n, h_k, n_blocks))
+    return cfg, scores, n
+
+
+@given(selection_case())
+@settings(**SETTINGS)
+def test_selection_invariants(case):
+    cfg, scores, n = case
+    idx, valid = selection.select_blocks(scores, jnp.arange(n), cfg, n)
+    idx, valid = np.asarray(idx), np.asarray(valid)
+    cur = np.arange(n) // cfg.block_size
+    for t in range(n):
+        for hk in range(idx.shape[1]):
+            sel = idx[t, hk][valid[t, hk]]
+            # causal: no selected block starts after the query token
+            assert (sel <= cur[t]).all()
+            # unique and ascending
+            assert (np.diff(sel) > 0).all()
+            # forced blocks present: initial block 0 and the current block
+            assert 0 in sel
+            assert cur[t] in sel
+
+
+@given(selection_case())
+@settings(**SETTINGS)
+def test_union_index_builder_covers_selection(case):
+    """Every (token, selected block) appears in its q-block's union list."""
+    cfg, scores, n = case
+    idx, valid = selection.select_blocks(scores, jnp.arange(n), cfg, n)
+    kv_ids, kv_cnt = indexing.build_qblock_union(idx, valid, cfg, n)
+    kv_ids, kv_cnt = np.asarray(kv_ids), np.asarray(kv_cnt)
+    idx, valid = np.asarray(idx), np.asarray(valid)
+    bq = cfg.q_block_size
+    for t in range(n):
+        qb = t // bq
+        for hk in range(idx.shape[1]):
+            union = set(kv_ids[hk, qb, :kv_cnt[hk, qb]].tolist())
+            for blk in idx[t, hk][valid[t, hk]]:
+                assert int(blk) in union
+
+
+@given(selection_case())
+@settings(**SETTINGS)
+def test_kvlist_slot_mapping_consistent(case):
+    """I_i/O_i duality: if q-block qb is listed for KV block i with slot s,
+    then the union list of qb has block i at position s."""
+    cfg, scores, n = case
+    idx, valid = selection.select_blocks(scores, jnp.arange(n), cfg, n)
+    kv_ids, kv_cnt = indexing.build_qblock_union(idx, valid, cfg, n)
+    q_ids, slot_ids, q_cnt = indexing.build_kvblock_qlists(idx, valid, cfg, n)
+    kv_ids, kv_cnt = np.asarray(kv_ids), np.asarray(kv_cnt)
+    q_ids, slot_ids, q_cnt = (np.asarray(a) for a in (q_ids, slot_ids, q_cnt))
+    h_k, b, _ = q_ids.shape
+    for hk in range(h_k):
+        for i in range(b):
+            for j in range(q_cnt[hk, i]):
+                qb, s = q_ids[hk, i, j], slot_ids[hk, i, j]
+                assert s < kv_cnt[hk, qb]
+                assert kv_ids[hk, qb, s] == i
+
+
+@given(st.integers(0, 2**16), st.integers(1, 4))
+@settings(**SETTINGS)
+def test_online_softmax_block_permutation_invariance(seed, nblocks):
+    """Processing KV blocks in any order gives the same online softmax."""
+    key = jax.random.PRNGKey(seed)
+    s = jax.random.normal(key, (4, nblocks * 8))
+    blocks = jnp.split(s, nblocks, axis=1)
+
+    def online(blocks):
+        m = jnp.full((4, 1), -1e30)
+        l = jnp.zeros((4, 1))
+        acc = jnp.zeros((4, 1))
+        for blk in blocks:
+            m_new = jnp.maximum(m, blk.max(1, keepdims=True))
+            corr = jnp.exp(m - m_new)
+            p = jnp.exp(blk - m_new)
+            l = corr * l + p.sum(1, keepdims=True)
+            acc = corr * acc + p.sum(1, keepdims=True)
+            m = m_new
+        return m + jnp.log(l)
+
+    lse_fwd = online(blocks)
+    lse_rev = online(blocks[::-1])
+    np.testing.assert_allclose(lse_fwd, lse_rev, rtol=1e-6)
+    full = jax.nn.logsumexp(s, axis=1, keepdims=True)
+    np.testing.assert_allclose(lse_fwd, full, rtol=1e-5)
+
+
+@given(st.lists(st.integers(1, 40), min_size=1, max_size=10),
+       st.sampled_from([16, 32]))
+@settings(**SETTINGS)
+def test_pack_documents_roundtrip(doc_lens, seq_len):
+    docs = [np.full(l, i + 1, np.int32) for i, l in enumerate(doc_lens)]
+    rows, segs = pack_documents(docs, seq_len)
+    assert rows.shape == segs.shape and rows.shape[1] == seq_len
+    # total non-pad tokens preserved
+    assert (segs > 0).sum() == sum(doc_lens)
+    # each row's segments are non-decreasing (packing is contiguous)
+    for r in segs:
+        nz = r[r > 0]
+        assert (np.diff(nz) >= 0).all()
+
+
+@given(st.integers(0, 2**16))
+@settings(max_examples=10, deadline=None)
+def test_gradient_compression_error_feedback(seed):
+    """Error feedback: compressing the same gradient repeatedly converges to
+    the true value (residual re-injects quantization error)."""
+    from repro.optim.compression import compress, decompress
+
+    g = np.asarray(jax.random.normal(jax.random.PRNGKey(seed), (64,)))
+    res = jnp.zeros_like(g)
+    acc = np.zeros_like(g)
+    for step in range(20):
+        q, scale, res = compress(jnp.asarray(g), res)
+        acc += np.asarray(decompress(q, scale))
+    np.testing.assert_allclose(acc / 20, g, atol=0.05)
