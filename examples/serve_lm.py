@@ -1,7 +1,10 @@
-"""Batched serving example: prefill a batch of prompts, decode with NSA.
+"""Mixed-length serving example: continuous batching on the paged NSA cache.
 
-The decode path touches only compressed tokens + top-T selected blocks + the
-local window per step — O(N/stride) per token instead of O(N).
+Submits more variable-length prompts than there are decode slots; the engine
+admits them as slots and pages free up, prefills in fixed-size chunks, and
+decodes every active slot at its own absolute position.  The NSA decode path
+touches only compressed tokens + top-T selected pages + the local window per
+step — O(N/stride) per token instead of O(N).
 
 Run:  PYTHONPATH=src python examples/serve_lm.py --arch h2o-danube-3-4b
 """
@@ -9,36 +12,49 @@ from __future__ import annotations
 
 import argparse
 
-import jax
+import numpy as np
 
 from repro.configs import get_config, reduced
-from repro.launch.serve import Engine, Request
+from repro.serving import Engine
 
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="h2o-danube-3-4b")
-    ap.add_argument("--batch", type=int, default=4)
-    ap.add_argument("--prompt-len", type=int, default=96)
-    ap.add_argument("--new-tokens", type=int, default=24)
+    ap.add_argument("--slots", type=int, default=2)
+    ap.add_argument("--requests", type=int, default=5)
+    ap.add_argument("--max-prompt", type=int, default=96)
+    ap.add_argument("--new-tokens", type=int, default=12)
     args = ap.parse_args()
 
     cfg = reduced(get_config(args.arch))
-    eng = Engine(cfg, batch_slots=args.batch,
-                 max_len=args.prompt_len + args.new_tokens + 8)
-    reqs = [Request(i,
-                    jax.random.randint(jax.random.PRNGKey(i),
-                                       (args.prompt_len,), 0, cfg.vocab),
-                    max_new=args.new_tokens)
-            for i in range(args.batch)]
-    stats = eng.run(reqs, args.new_tokens)
-    print(f"[serve_lm] arch={args.arch} (reduced) batch={args.batch} "
-          f"prompt={args.prompt_len}")
-    print(f"  prefill: {stats['prefill_s']*1e3:.1f} ms")
-    print(f"  decode:  {stats['decode_s_per_token']*1e3:.1f} ms/token "
-          f"(batched over {args.batch} slots)")
-    for r in reqs[:2]:
-        print(f"  request {r.rid}: {r.out}")
+    eng = Engine(cfg, n_slots=args.slots,
+                 max_len=args.max_prompt + args.new_tokens + 8)
+    rng = np.random.default_rng(0)
+    reqs = []
+    for _ in range(args.requests):
+        plen = int(rng.integers(max(args.max_prompt // 4, 1),
+                                args.max_prompt + 1))
+        reqs.append(eng.submit(rng.integers(0, cfg.vocab, size=(plen,)),
+                               max_new=args.new_tokens))
+
+    print(f"[serve_lm] arch={args.arch} (reduced) slots={args.slots} "
+          f"requests={args.requests} prompt lens="
+          f"{[len(r.prompt) for r in reqs]}")
+    while not eng.scheduler.idle():
+        ev = eng.step()
+        if ev["admitted"] or ev["finished"]:
+            print(f"  admitted={[r.rid for r in ev['admitted']]} "
+                  f"finished={[r.rid for r in ev['finished']]} "
+                  f"active={ev['active']} queued={ev['pending']} "
+                  f"pages={ev['page_util']['raw']:.0%}")
+    s = eng.summary()
+    print(f"  decode: {s['decode_tokens_per_s']:.1f} tok/s "
+          f"({s['decode_ms_per_tick']:.1f} ms/tick batched)  "
+          f"prefill: {s['prefill_tokens_per_s']:.1f} tok/s  "
+          f"peak pages: {s['peak_page_util']:.0%}")
+    for r in reqs[:3]:
+        print(f"  request {r.rid} (prompt {len(r.prompt)}): {r.out}")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,41 @@
+"""Device-side paged-KV indexing helpers.
+
+Low-level (no deps besides jnp) so every layer — kernels, model layers, the
+serving subsystem — can address token rows through a page table without
+upward imports.  A page table maps a slot's logical block index to a
+physical page id; page 0 is by convention a reserved dump page (idle slots
+and masked writes are routed there, keeping scatters unconditional).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def gather_rows(pool: jnp.ndarray, table: jnp.ndarray, positions: jnp.ndarray):
+    """Gather token rows through a page table.
+
+    pool: (N_pages, P, ...); table: (max_pages,) int32; positions: (M,) token
+    positions (clamped into the slot's addressable range).  Returns (M, ...).
+    """
+    p = pool.shape[1]
+    positions = jnp.clip(positions, 0, table.shape[0] * p - 1)
+    return pool[table[positions // p], positions % p]
+
+
+def scatter_rows(pool: jnp.ndarray, table: jnp.ndarray, positions: jnp.ndarray,
+                 values: jnp.ndarray, valid: jnp.ndarray | None = None):
+    """Scatter token rows through per-slot page tables.
+
+    pool: (N_pages, P, ...); table: (B, max_pages); positions: (B, M);
+    values: (B, M, ...).  Rows with ``valid == False`` (or positions outside
+    the slot's range) are routed to dump page 0.
+    """
+    p = pool.shape[1]
+    in_range = (positions >= 0) & (positions < table.shape[1] * p)
+    ok = in_range if valid is None else (valid & in_range)
+    pos_c = jnp.clip(positions, 0, table.shape[1] * p - 1)
+    pages = jnp.take_along_axis(table, pos_c // p, axis=1)         # (B, M)
+    pages = jnp.where(ok, pages, 0)                                # dump page
+    offs = jnp.where(ok, pos_c % p, 0)
+    return pool.at[pages.reshape(-1), offs.reshape(-1)].set(
+        values.reshape((-1,) + values.shape[2:]).astype(pool.dtype))

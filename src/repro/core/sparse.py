@@ -270,6 +270,32 @@ def nsa_attention_sparse(
     return out
 
 
+def decode_cmp_and_select(q_c, k_cmp, v_cmp, pos, cfg: NSAConfig,
+                          seq_len: int):
+    """Shared one-token decode prologue: compressed-branch attention + top-T
+    block selection.  Used by both the dense-cache decode below and the
+    paged decode in ``kernels.ops.paged_decode_attention`` so the two paths
+    stay provably identical.
+
+    q_c: (1, h, d); k_cmp/v_cmp: (N_cmp, h_k, d); pos: scalar; seq_len: raw
+    KV span (block ids index [0, num_kv_blocks(seq_len))).
+    Returns (out_cmp (1, h, dv), idx (1, h_k, T), valid).
+    """
+    g = q_c.shape[1] // k_cmp.shape[1]
+    # mask compressed tokens whose window is not complete or in the future
+    n_cmp = k_cmp.shape[0]
+    ends = jnp.arange(n_cmp) * cfg.cmp_stride + cfg.cmp_block_size - 1
+    vis = (ends <= pos)[None, None, :]
+    p_cmp, _ = _safe_softmax(_gqa_scores(q_c, k_cmp), vis)
+    out_cmp = _gqa_out(p_cmp, v_cmp)
+
+    sel_map = jnp.asarray(
+        compression.cmp_to_sel_map(n_cmp, cfg.num_kv_blocks(seq_len), cfg))
+    scores = selection.importance_scores(p_cmp, sel_map, g)
+    idx, valid = selection.select_blocks(scores, pos[None], cfg, seq_len)
+    return out_cmp, idx, valid
+
+
 def nsa_decode_step(
     params,
     gates: jnp.ndarray,
@@ -288,22 +314,10 @@ def nsa_decode_step(
     Cost: O(N_cmp + T·B_K + W) — linear in context with a small constant.
     """
     s = k_cache.shape[0]
-    h = q.shape[0]
-    h_k = k_cache.shape[1]
-    g = h // h_k
     q_c = q[None]                                            # (1, h, d)
     pos_c = pos[None]
 
-    # compressed branch: mask tokens whose window is not complete or future
-    n_cmp = k_cmp.shape[0]
-    ends = jnp.arange(n_cmp) * cfg.cmp_stride + cfg.cmp_block_size - 1
-    vis = (ends <= pos)[None, None, :]
-    p_cmp, _ = _safe_softmax(_gqa_scores(q_c, k_cmp), vis)
-    out_cmp = _gqa_out(p_cmp, v_cmp)
-
-    sel_map = jnp.asarray(compression.cmp_to_sel_map(n_cmp, cfg.num_kv_blocks(s), cfg))
-    scores = selection.importance_scores(p_cmp, sel_map, g)
-    idx, valid = selection.select_blocks(scores, pos_c, cfg, s)
+    out_cmp, idx, valid = decode_cmp_and_select(q_c, k_cmp, v_cmp, pos, cfg, s)
     out_sel = selected_gather_attention(q_c, k_cache, v_cache, idx, valid, cfg, pos_c)
     out_win = sliding_window_chunk(
         q_c, k_cache, v_cache, pos - (cfg.window_size - 1), cfg, pos_c

@@ -1,0 +1,18 @@
+"""Version-compat shims for the Pallas TPU API surface.
+
+jax renamed ``pltpu.TPUCompilerParams`` -> ``pltpu.CompilerParams`` across
+releases; this repo must run on both sides of the rename (the container pins
+jax 0.4.37, which only has ``TPUCompilerParams``).  All kernels route through
+``tpu_compiler_params`` instead of touching the class directly.
+"""
+from __future__ import annotations
+
+from jax.experimental.pallas import tpu as pltpu
+
+_COMPILER_PARAMS_CLS = getattr(pltpu, "CompilerParams", None) or getattr(
+    pltpu, "TPUCompilerParams")
+
+
+def tpu_compiler_params(**kwargs):
+    """Build the TPU compiler-params object under either jax naming."""
+    return _COMPILER_PARAMS_CLS(**kwargs)

@@ -25,6 +25,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.compat import tpu_compiler_params
+
 NEG_INF = -1e30
 
 
@@ -142,7 +144,7 @@ def fsa_faithful(q_rows, k, v, sel_rows, kv_ids, kv_cnt, q_ids, slot_ids, q_cnt,
             scratch_shapes=[pltpu.VMEM((rows, 128), jnp.float32)] * 2,
         ),
         out_shape=jax.ShapeDtypeStruct((h_k, rows_total, 128), jnp.float32),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=tpu_compiler_params(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(kv_ids, kv_cnt, q_rows, k, sel_rows)
@@ -176,7 +178,7 @@ def fsa_faithful(q_rows, k, v, sel_rows, kv_ids, kv_cnt, q_ids, slot_ids, q_cnt,
             out_specs=pl.BlockSpec((1, 1, 1, rows, dv), _obuf_index),
         ),
         out_shape=jax.ShapeDtypeStruct((h_k, nq, cap + 1, rows, dv), jnp.float32),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=tpu_compiler_params(
             dimension_semantics=("parallel", "arbitrary", "arbitrary")),
         interpret=interpret,
     )(q_ids, slot_ids, q_cnt, q_rows, k, v, sel_rows, lse)
@@ -195,7 +197,7 @@ def fsa_faithful(q_rows, k, v, sel_rows, kv_ids, kv_cnt, q_ids, slot_ids, q_cnt,
             scratch_shapes=[pltpu.VMEM((rows, dv), jnp.float32)],
         ),
         out_shape=jax.ShapeDtypeStruct((h_k, rows_total, dv), q_rows.dtype),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=tpu_compiler_params(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(kv_cnt, obuf)

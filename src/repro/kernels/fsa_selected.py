@@ -34,6 +34,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.compat import tpu_compiler_params
+
 NEG_INF = -1e30
 
 
@@ -125,7 +127,7 @@ def fsa_selected(q_rows, k, v, sel_rows, kv_ids, kv_cnt, *, g: int,
         kernel,
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((h_k, rows_total, dv), q_rows.dtype),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=tpu_compiler_params(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(kv_ids, kv_cnt, q_rows, k, v, sel_rows)

@@ -20,6 +20,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.compat import tpu_compiler_params
+
 NEG_INF = -1e30
 
 
@@ -96,7 +98,7 @@ def nsa_selected(q_pad, k, v, idx, *, block_k: int, interpret: bool = True):
         kernel,
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((h_k, n, g_pad, dv), q_pad.dtype),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=tpu_compiler_params(
             dimension_semantics=("parallel", "arbitrary", "arbitrary")),
         interpret=interpret,
     )(idx, q_pad, k, v)

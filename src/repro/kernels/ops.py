@@ -20,6 +20,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import indexing, sparse
+from repro.core.paging import gather_rows
 from repro.core.nsa_config import NSAConfig
 from repro.kernels import flash_attention as _flash
 from repro.kernels import fsa_faithful as _faithful
@@ -162,6 +163,80 @@ def _flash_bwd(cfg, causal, window, res, dout):
 
 
 _flash_op.defvjp(_flash_fwd, _flash_bwd)
+
+
+def paged_decode_attention(gates, q, k_pages, v_pages, page_table,
+                           cmp_k, cmp_v, pos, cfg: NSAConfig, *,
+                           use_kernel: bool = False):
+    """One-token NSA decode reading KV through a page table — touches ONLY
+    the pages the three branches address (page size == B_K, so one selected
+    block is one physical page):
+
+      compressed  all compressed-token rows (already gathered views — they
+                  are O(N/stride) small)
+      selected    the T pages named by ``page_table[idx]``
+      sliding     the trailing ceil(W/B_K)+1 pages
+
+    q: (h, d); k_pages/v_pages: (N_pages, P, h_k, d*); page_table:
+    (max_pages,) int32; cmp_k/cmp_v: (N_cmp_max, h_k, d*); pos: scalar.
+
+    This is the gather-through-page-table reference path.  ``use_kernel`` is
+    the Pallas hook point: the selected branch maps onto ``fsa_selected``'s
+    BlockSpec pattern with the kv index_map composed through the page table
+    (ids -> page_table[ids]), which keeps HBM reads at page granularity.
+    """
+    if use_kernel:
+        raise NotImplementedError(
+            "Pallas paged decode: compose fsa_selected's kv index_map through "
+            "the page table (see kernels/fsa_selected.py)")
+    from repro.core.reference import _gqa_out, _gqa_scores, _safe_softmax
+
+    h, d = q.shape
+    n_pages_max, p_sz, h_k, _ = k_pages.shape
+    assert p_sz == cfg.block_size, "page size must equal the NSA block size"
+    g = h // h_k
+    max_pages = page_table.shape[0]
+    s_max = max_pages * p_sz
+    q_c = q[None]                                           # (1, h, d)
+
+    # --- compressed branch + top-T selection (shared with the dense path;
+    #     logical block id == page-table index) ---
+    out_cmp, idx, valid = sparse.decode_cmp_and_select(
+        q_c, cmp_k, cmp_v, pos, cfg, s_max)
+    idx, valid = idx[0], valid[0]                           # (h_k, T)
+
+    # --- selected branch: gather exactly the T physical pages per KV head
+    #     (each head pulls only its own rows of its own pages) ---
+    t = idx.shape[-1]
+    phys = page_table[idx]                                  # (h_k, T)
+    hk_i = jnp.arange(h_k)
+    k_sel = jax.vmap(lambda ph, i: k_pages[ph, :, i])(phys, hk_i)
+    v_sel = jax.vmap(lambda ph, i: v_pages[ph, :, i])(phys, hk_i)
+    k_sel = k_sel.reshape(h_k, t * p_sz, d)                 # (h_k, T·P, d)
+    v_sel = v_sel.reshape(h_k, t * p_sz, -1)
+    tok_pos = (idx[..., None] * p_sz + jnp.arange(p_sz)).reshape(h_k, t * p_sz)
+    sel_mask = jnp.repeat(valid, p_sz, axis=-1) & (tok_pos <= pos)
+    qg = q.reshape(h_k, g, d).astype(jnp.float32)
+    s_sel = jnp.einsum("kgd,ksd->kgs", qg, k_sel.astype(jnp.float32))
+    s_sel = s_sel / jnp.sqrt(d).astype(jnp.float32)
+    p_sel, _ = _safe_softmax(s_sel, sel_mask[:, None, :])
+    out_sel = jnp.einsum("kgs,ksd->kgd", p_sel, v_sel.astype(jnp.float32))
+    out_sel = out_sel.reshape(1, h, -1)
+
+    # --- sliding branch: the trailing window through the page table ---
+    w = cfg.window_size
+    win_rows = pos - (w - 1) + jnp.arange(w)
+    k_win = gather_rows(k_pages, page_table, win_rows)      # (W, h_k, d)
+    v_win = gather_rows(v_pages, page_table, win_rows)
+    win_mask = (win_rows >= 0) & (win_rows <= pos)
+    p_win, _ = _safe_softmax(_gqa_scores(q_c, k_win), win_mask[None, None, :])
+    out_win = _gqa_out(p_win, v_win)
+
+    gf = gates.astype(jnp.float32)[None]
+    out = (gf[..., 0:1] * out_cmp.astype(jnp.float32)
+           + gf[..., 1:2] * out_sel.astype(jnp.float32)
+           + gf[..., 2:3] * out_win.astype(jnp.float32))
+    return out[0].astype(q.dtype)
 
 
 def full_attention(q, k, v, cfg: NSAConfig, *, causal: bool = True):

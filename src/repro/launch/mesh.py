@@ -5,7 +5,27 @@ from __future__ import annotations
 import numpy as np
 
 import jax
-from jax.sharding import AxisType, Mesh
+import jax.sharding
+from jax.sharding import Mesh
+
+# jax >= 0.5 gained explicit axis types; on older releases (container pins
+# 0.4.37) Mesh takes no ``axis_types`` argument and all axes are "auto".
+_AXIS_TYPE = getattr(jax.sharding, "AxisType", None)
+
+
+def _mesh(devices, axes):
+    if _AXIS_TYPE is not None:
+        return Mesh(devices, axes, axis_types=(_AXIS_TYPE.Auto,) * len(axes))
+    return Mesh(devices, axes)
+
+
+def mesh_context(mesh: Mesh):
+    """Context manager activating ``mesh`` (jax.set_mesh on new jax, the
+    Mesh context manager on 0.4.x)."""
+    set_mesh = getattr(jax, "set_mesh", None)
+    if set_mesh is not None:
+        return set_mesh(mesh)
+    return mesh
 
 
 def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
@@ -25,12 +45,11 @@ def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
             f"need {n} devices, have {len(devs)} — run under "
             f"XLA_FLAGS=--xla_force_host_platform_device_count=512 (dryrun.py "
             f"sets this automatically)")
-    return Mesh(np.asarray(devs[:n]).reshape(shape), axes,
-                axis_types=(AxisType.Auto,) * len(axes))
+    return _mesh(np.asarray(devs[:n]).reshape(shape), axes)
 
 
 def make_mesh(shape, axes) -> Mesh:
     """Arbitrary mesh for tests / elastic restarts."""
     n = int(np.prod(shape))
-    return Mesh(np.asarray(jax.devices()[:n]).reshape(tuple(shape)),
-                tuple(axes), axis_types=(AxisType.Auto,) * len(axes))
+    return _mesh(np.asarray(jax.devices()[:n]).reshape(tuple(shape)),
+                 tuple(axes))

@@ -25,7 +25,7 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 from repro.checkpoint import ckpt
 from repro.configs import SHAPES, get_config, reduced
 from repro.data.pipeline import DataConfig, SyntheticLM
-from repro.launch.mesh import make_mesh
+from repro.launch.mesh import make_mesh, mesh_context
 from repro.launch.steps import make_train_step
 from repro.models import build
 from repro.optim import AdamWConfig, init_opt_state
@@ -47,7 +47,7 @@ def train_loop(cfg, *, steps: int, batch: int, seq: int, mesh,
     ns = lambda tree: jax.tree.map(lambda s: NamedSharding(mesh, s), tree,
                                    is_leaf=lambda x: isinstance(x, P))
 
-    with jax.set_mesh(mesh):
+    with mesh_context(mesh):
         params = model.init(jax.random.PRNGKey(0))
         pspecs = partition.param_specs(params, mesh)
         from repro.optim import opt_state_specs

@@ -22,6 +22,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import attention as core_attn
+from repro.core.paging import gather_rows, scatter_rows
 from repro.core import compression, gating, sparse
 from repro.models.layers import apply_rope, dense_init, rms_norm
 from repro.parallel.axes import shard
@@ -180,62 +181,263 @@ def attention_prefill(p, x, cfg, cache):
     return y, cache
 
 
+def _emit_cmp_token(p, cfg, win_k, win_v):
+    """Compress one complete (l,)-token window into a single summary token.
+
+    win_k/win_v: (B, l, h_k, d) -> (ck, cv): (B, h_k, d).
+    """
+    nsa = cfg.nsa
+    one = dataclasses.replace(nsa, cmp_block_size=nsa.cmp_block_size,
+                              cmp_stride=nsa.cmp_block_size)
+    ck, cv = jax.vmap(lambda k1, v1: compression.compress_kv(p["nsa"], k1, v1, one)
+                      )(win_k, win_v)
+    return ck[:, 0], cv[:, 0]
+
+
 def _update_cmp_cache(p, cfg, cache, pos):
-    """Emit the newest compression token if a stride boundary was crossed."""
+    """Emit the newest compression token per slot if its stride boundary was
+    crossed.  pos: (B,) absolute positions (per-slot, continuous batching)."""
     nsa = cfg.nsa
     l, st = nsa.cmp_block_size, nsa.cmp_stride
+    b = pos.shape[0]
     new_len = pos + 1
-    has_new = (new_len >= l) & ((new_len - l) % st == 0)
-    j = jnp.maximum((new_len - l) // st, 0)              # cmp token index
-    start = j * st
+    has_new = (new_len >= l) & ((new_len - l) % st == 0)     # (B,)
+    j = jnp.maximum((new_len - l) // st, 0)                  # cmp token index
+    rows = (j * st)[:, None] + jnp.arange(l)[None, :]        # (B, l)
+    b_idx = jnp.arange(b)
+    win_k = cache["k"][b_idx[:, None], rows]                 # (B, l, h_k, d)
+    win_v = cache["v"][b_idx[:, None], rows]
+    ck, cv = _emit_cmp_token(p, cfg, win_k, win_v)
 
-    def emit(cache):
-        win_k = jax.lax.dynamic_slice_in_dim(cache["k"], start, l, axis=1)
-        win_v = jax.lax.dynamic_slice_in_dim(cache["v"], start, l, axis=1)
-        ck, cv = jax.vmap(lambda k1, v1: compression.compress_kv(p["nsa"], k1, v1,
-                    dataclasses.replace(nsa, cmp_block_size=l, cmp_stride=l)))(win_k, win_v)
-        cache = dict(cache)
-        cache["cmp_k"] = jax.lax.dynamic_update_slice(
-            cache["cmp_k"], ck.astype(cache["cmp_k"].dtype), (0, j, 0, 0))
-        cache["cmp_v"] = jax.lax.dynamic_update_slice(
-            cache["cmp_v"], cv.astype(cache["cmp_v"].dtype), (0, j, 0, 0))
-        return cache
-
-    return jax.lax.cond(has_new, emit, lambda c: dict(c), cache)
+    cache = dict(cache)
+    tgt = jnp.where(has_new, jnp.minimum(j, cache["cmp_k"].shape[1] - 1), 0)
+    sel = has_new[:, None, None]
+    new_ck = jnp.where(sel, ck.astype(cache["cmp_k"].dtype), cache["cmp_k"][b_idx, tgt])
+    new_cv = jnp.where(sel, cv.astype(cache["cmp_v"].dtype), cache["cmp_v"][b_idx, tgt])
+    cache["cmp_k"] = cache["cmp_k"].at[b_idx, tgt].set(new_ck)
+    cache["cmp_v"] = cache["cmp_v"].at[b_idx, tgt].set(new_cv)
+    return cache
 
 
 def attention_decode(p, x_t, cache, pos, cfg):
-    """One decode step. x_t: (B,D); pos: scalar absolute position."""
+    """One decode step. x_t: (B,D); pos: scalar or (B,) absolute positions.
+
+    A (B,) vector enables continuous batching: every slot decodes at its own
+    depth into the cache (variable-length traffic).  Scalar pos broadcasts.
+    """
     b = x_t.shape[0]
+    pos = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (b,))
     x1 = x_t[:, None, :]
-    pos_b = jnp.broadcast_to(pos, (b, 1))
-    q, k, v = _qkv(p, x1, cfg, pos_b)                    # (B,1,h,dk) ...
+    q, k, v = _qkv(p, x1, cfg, pos[:, None])             # (B,1,h,dk) ...
+    b_idx = jnp.arange(b)
     cache = dict(cache)
-    cache["k"] = jax.lax.dynamic_update_slice(
-        cache["k"], k.astype(cache["k"].dtype), (0, pos, 0, 0))
-    cache["v"] = jax.lax.dynamic_update_slice(
-        cache["v"], v.astype(cache["v"].dtype), (0, pos, 0, 0))
+    cache["k"] = cache["k"].at[b_idx, pos].set(k[:, 0].astype(cache["k"].dtype))
+    cache["v"] = cache["v"].at[b_idx, pos].set(v[:, 0].astype(cache["v"].dtype))
 
     if cfg.attention == "nsa":
         cache = _update_cmp_cache(p, cfg, cache, pos)
         gates = gating.apply_gates(p["nsa"], x_t)        # (B,h,3)
-        fn = lambda q1, kc, vc, ck, cv, g1: sparse.nsa_decode_step(
-            p["nsa"], g1, q1, kc, vc, ck, cv, pos, cfg.nsa)
+        fn = lambda q1, kc, vc, ck, cv, g1, p1: sparse.nsa_decode_step(
+            p["nsa"], g1, q1, kc, vc, ck, cv, p1, cfg.nsa)
         o = jax.vmap(fn)(q[:, 0], cache["k"], cache["v"],
-                         cache["cmp_k"], cache["cmp_v"], gates)
+                         cache["cmp_k"], cache["cmp_v"], gates, pos)
     else:
         window = cfg.swa_window if cfg.attention == "swa" else None
         span = cache["k"].shape[1]
         key_pos = jnp.arange(span)
-        mask = key_pos <= pos
+        mask = key_pos[None, :] <= pos[:, None]          # (B, span)
         if window is not None:
-            mask &= key_pos > pos - window
+            mask &= key_pos[None, :] > (pos[:, None] - window)
         from repro.core.reference import _gqa_out, _gqa_scores, _safe_softmax
-        def fn(q1, kc, vc):
+        def fn(q1, kc, vc, m1):
             scores = _gqa_scores(q1, kc)
-            probs, _ = _safe_softmax(scores, mask[None, None, :])
+            probs, _ = _safe_softmax(scores, m1[None, None, :])
             return _gqa_out(probs, vc).astype(q1.dtype)
-        o = jax.vmap(fn)(q[:, 0:1], cache["k"], cache["v"])
+        o = jax.vmap(fn)(q[:, 0:1], cache["k"], cache["v"], mask)
         o = o[:, 0]
     o = o.reshape(b, 1, cfg.n_heads, -1)
     return _out_proj(p, o, cfg)[:, 0], cache
+
+
+# ------------------------------------------------------------- paged decode
+def init_paged_attn_cache(cfg, num_pages: int, num_cmp_pages: int):
+    """Per-layer paged KV storage: raw-token pages + compressed-token pages.
+
+    Page size equals ``cfg.nsa.block_size`` so a selected NSA block IS one
+    physical page — the selected branch reads exactly the pages the page
+    table names.  Page 0 of each pool is a reserved dump page (never
+    allocated); idle slots and masked writes land there.
+    """
+    dtype = jnp.dtype(cfg.dtype)
+    pp = cfg.nsa.block_size
+    if cfg.mla is not None:
+        dk = cfg.mla.kv_lora + cfg.mla.rope_dim
+        dv, hk = cfg.mla.kv_lora, 1
+    else:
+        dk = dv = cfg.hd()
+        hk = cfg.n_kv_heads
+    cache = {
+        "k_pages": jnp.zeros((num_pages, pp, hk, dk), dtype),
+        "v_pages": jnp.zeros((num_pages, pp, hk, dv), dtype),
+    }
+    if cfg.attention == "nsa":
+        cache["cmp_k_pages"] = jnp.zeros((num_cmp_pages, pp, hk, dk), dtype)
+        cache["cmp_v_pages"] = jnp.zeros((num_cmp_pages, pp, hk, dv), dtype)
+    return cache
+
+
+def _paged_emit_cmp(p, cfg, layer_cache, tables, pos):
+    """Per-slot stride-boundary compressed-token emission on paged storage.
+
+    pos: (B,) position of the token just written; emits cmp token
+    ``j = (pos+1-l)/st`` for slots that crossed a boundary, writing it through
+    the compressed-page table (dump page 0 otherwise).
+    """
+    nsa = cfg.nsa
+    l, st = nsa.cmp_block_size, nsa.cmp_stride
+    new_len = pos + 1
+    has_new = (new_len >= l) & ((new_len - l) % st == 0)           # (B,)
+    j = jnp.maximum((new_len - l) // st, 0)
+    rows = (j * st)[:, None] + jnp.arange(l)[None, :]              # (B, l)
+    win_k = jax.vmap(gather_rows, in_axes=(None, 0, 0))(
+        layer_cache["k_pages"], tables["page_table"], rows)        # (B,l,hk,dk)
+    win_v = jax.vmap(gather_rows, in_axes=(None, 0, 0))(
+        layer_cache["v_pages"], tables["page_table"], rows)
+    ck, cv = _emit_cmp_token(p, cfg, win_k, win_v)                 # (B,hk,d)
+
+    layer_cache = dict(layer_cache)
+    layer_cache["cmp_k_pages"] = scatter_rows(
+        layer_cache["cmp_k_pages"], tables["cmp_table"], j[:, None],
+        ck[:, None], valid=has_new[:, None])
+    layer_cache["cmp_v_pages"] = scatter_rows(
+        layer_cache["cmp_v_pages"], tables["cmp_table"], j[:, None],
+        cv[:, None], valid=has_new[:, None])
+    return layer_cache
+
+
+def paged_attention_decode(p, x_t, layer_cache, tables, pos, cfg):
+    """One decode step on paged KV storage (continuous batching).
+
+    x_t: (B, D); pos: (B,) per-slot absolute positions;
+    tables: {"page_table": (B, max_pages), "cmp_table": (B, max_cmp_pages)}.
+
+    The NSA path reads only the pages its branches touch: compressed pages,
+    the top-T selected pages (page == NSA block), and the sliding-window
+    pages — via ``kernels.ops.paged_decode_attention``.
+    """
+    from repro.kernels import ops
+    b = x_t.shape[0]
+    pos = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (b,))
+    q, k, v = _qkv(p, x_t[:, None, :], cfg, pos[:, None])
+    layer_cache = dict(layer_cache)
+    layer_cache["k_pages"] = scatter_rows(
+        layer_cache["k_pages"], tables["page_table"], pos[:, None], k)
+    layer_cache["v_pages"] = scatter_rows(
+        layer_cache["v_pages"], tables["page_table"], pos[:, None], v)
+
+    if cfg.attention == "nsa":
+        layer_cache = _paged_emit_cmp(p, cfg, layer_cache, tables, pos)
+        gates = gating.apply_gates(p["nsa"], x_t)                  # (B,h,3)
+        n_cmp_max = tables["cmp_table"].shape[1] * cfg.nsa.block_size
+        cmp_rows = jnp.arange(n_cmp_max)
+        cmp_k = jax.vmap(gather_rows, in_axes=(None, 0, None))(
+            layer_cache["cmp_k_pages"], tables["cmp_table"], cmp_rows)
+        cmp_v = jax.vmap(gather_rows, in_axes=(None, 0, None))(
+            layer_cache["cmp_v_pages"], tables["cmp_table"], cmp_rows)
+        fn = lambda q1, tb, ck, cv, g1, p1: ops.paged_decode_attention(
+            g1, q1, layer_cache["k_pages"], layer_cache["v_pages"],
+            tb, ck, cv, p1, cfg.nsa)
+        o = jax.vmap(fn)(q[:, 0], tables["page_table"], cmp_k, cmp_v, gates, pos)
+    else:
+        # full / swa reference: gather the visible span through the page table
+        span = tables["page_table"].shape[1] * cfg.nsa.block_size
+        if cfg.attention == "swa":
+            w = cfg.swa_window
+            span = min(span, w)
+            rows = pos[:, None] - (span - 1) + jnp.arange(span)[None, :]
+        else:
+            rows = jnp.broadcast_to(jnp.arange(span)[None, :], (b, span))
+        rows_c = jnp.clip(rows, 0, None)
+        k_view = jax.vmap(gather_rows, in_axes=(None, 0, 0))(
+            layer_cache["k_pages"], tables["page_table"], rows_c)
+        v_view = jax.vmap(gather_rows, in_axes=(None, 0, 0))(
+            layer_cache["v_pages"], tables["page_table"], rows_c)
+        mask = (rows >= 0) & (rows <= pos[:, None])
+        if cfg.attention == "swa":
+            mask &= rows > (pos[:, None] - cfg.swa_window)
+        from repro.core.reference import _gqa_out, _gqa_scores, _safe_softmax
+        def fn(q1, kc, vc, m1):
+            probs, _ = _safe_softmax(_gqa_scores(q1, kc), m1[None, None, :])
+            return _gqa_out(probs, vc).astype(q1.dtype)
+        o = jax.vmap(fn)(q[:, 0:1], k_view, v_view, mask)[:, 0]
+    o = o.reshape(b, 1, cfg.n_heads, -1)
+    return _out_proj(p, o, cfg)[:, 0], layer_cache
+
+
+def paged_attention_prefill_chunk(p, x_c, layer_cache, tables, t0, length, cfg):
+    """Chunked prefill of ONE slot into paged storage.
+
+    x_c: (C, D) chunk of hidden states at absolute positions [t0, t0+C);
+    tables: {"page_table": (max_pages,), "cmp_table": (max_cmp_pages,)};
+    length: scalar — true prompt length (chunk tail beyond it is padding).
+    Attends chunk queries against the whole paged prefix (causally masked),
+    so chunks can be streamed through a fixed-shape jit at any prompt length.
+    """
+    c = x_c.shape[0]
+    pos_c = t0 + jnp.arange(c)                                     # (C,)
+    q, k, v = _qkv(p, x_c[None], cfg, pos_c[None])
+    q, k, v = q[0], k[0], v[0]                                     # (C,h,d)...
+    layer_cache = dict(layer_cache)
+    layer_cache["k_pages"] = scatter_rows(
+        layer_cache["k_pages"], tables["page_table"][None], pos_c[None], k[None])
+    layer_cache["v_pages"] = scatter_rows(
+        layer_cache["v_pages"], tables["page_table"][None], pos_c[None], v[None])
+
+    s_max = tables["page_table"].shape[0] * cfg.nsa.block_size
+    view_rows = jnp.arange(s_max)
+    k_view = gather_rows(layer_cache["k_pages"], tables["page_table"], view_rows)
+    v_view = gather_rows(layer_cache["v_pages"], tables["page_table"], view_rows)
+    q_mask = pos_c < length                                        # padding tail
+
+    if cfg.attention == "nsa":
+        nsa = cfg.nsa
+        l, st = nsa.cmp_block_size, nsa.cmp_stride
+        # emit every cmp token whose window completes inside this chunk:
+        # ends e(j) = j*st + l - 1 in [t0, t0+C)  ->  at most C//st + 1 tokens
+        max_emit = c // st + 1
+        j0 = jnp.maximum(-((l - 1 - t0) // st), 0)     # ceil((t0-l+1)/st)
+        js = j0 + jnp.arange(max_emit)                             # (E,)
+        ends = js * st + l - 1
+        ok = (ends >= t0) & (ends < t0 + c) & (ends < length)
+        wrows = (js * st)[:, None] + jnp.arange(l)[None, :]        # (E, l)
+        win_k = jax.vmap(gather_rows, in_axes=(None, None, 0))(
+            layer_cache["k_pages"], tables["page_table"], wrows)
+        win_v = jax.vmap(gather_rows, in_axes=(None, None, 0))(
+            layer_cache["v_pages"], tables["page_table"], wrows)
+        ck, cv = _emit_cmp_token(p, cfg, win_k, win_v)             # (E,hk,d)
+        layer_cache["cmp_k_pages"] = scatter_rows(
+            layer_cache["cmp_k_pages"], tables["cmp_table"][None], js[None],
+            ck[None], valid=ok[None])
+        layer_cache["cmp_v_pages"] = scatter_rows(
+            layer_cache["cmp_v_pages"], tables["cmp_table"][None], js[None],
+            cv[None], valid=ok[None])
+
+        n_cmp_max = tables["cmp_table"].shape[0] * nsa.block_size
+        cmp_rows = jnp.arange(n_cmp_max)
+        cmp_k = gather_rows(layer_cache["cmp_k_pages"], tables["cmp_table"], cmp_rows)
+        cmp_v = gather_rows(layer_cache["cmp_v_pages"], tables["cmp_table"], cmp_rows)
+        gates = gating.apply_gates(p["nsa"], x_c)                  # (C,h,3)
+        sel_map = jnp.asarray(compression.cmp_to_sel_map(
+            n_cmp_max, nsa.num_kv_blocks(s_max), nsa))
+        o, _ = sparse._nsa_chunk(p["nsa"], nsa, k_view, v_view, cmp_k, cmp_v,
+                                 sel_map, (q, gates, pos_c))
+    else:
+        key_pos = jnp.arange(s_max)
+        mask = key_pos[None, :] <= pos_c[:, None]
+        if cfg.attention == "swa":
+            mask &= key_pos[None, :] > (pos_c[:, None] - cfg.swa_window)
+        from repro.core.reference import _gqa_out, _gqa_scores, _safe_softmax
+        probs, _ = _safe_softmax(_gqa_scores(q, k_view), mask[:, None, :])
+        o = _gqa_out(probs, v_view).astype(q.dtype)
+    o = jnp.where(q_mask[:, None, None], o.reshape(c, cfg.n_heads, -1), 0)
+    return _out_proj(p, o[None], cfg)[0], layer_cache

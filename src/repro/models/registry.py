@@ -46,6 +46,13 @@ def build(cfg: ModelConfig) -> SimpleNamespace:
             p, c, t, pos, cfg),
         init_cache=lambda batch, max_len: transformer.init_lm_cache(
             cfg, batch, max_len),
+        # paged serving entries (attention families; see repro.serving)
+        init_paged_cache=lambda num_pages, num_cmp_pages:
+            transformer.init_lm_paged_cache(cfg, num_pages, num_cmp_pages),
+        paged_prefill_chunk=lambda p, c, t, t0, ln, tb:
+            transformer.lm_paged_prefill_chunk(p, c, t, t0, ln, tb, cfg),
+        paged_decode_step=lambda p, c, t, pos, tb:
+            transformer.lm_paged_decode_step(p, c, t, pos, tb, cfg),
     )
 
 

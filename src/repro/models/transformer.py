@@ -301,6 +301,73 @@ def init_lm_cache(cfg, batch: int, max_len: int):
                                    cfg.n_layers)}
 
 
+def init_lm_paged_cache(cfg, num_pages: int, num_cmp_pages: int):
+    """Paged decode cache (attention families only — ssm/hybrid/encdec carry
+    recurrent or cross-attention state that is not paged KV)."""
+    if cfg.family in ("ssm", "hybrid", "encdec"):
+        raise NotImplementedError(f"no paged cache for family '{cfg.family}'")
+    return {"layers": _stack_cache(
+        attn.init_paged_attn_cache(cfg, num_pages, num_cmp_pages),
+        cfg.n_layers)}
+
+
+def lm_paged_decode_step(params, cache, tokens, pos, tables, cfg):
+    """Batched decode on paged storage.
+
+    tokens: (B,) int32; pos: (B,) per-slot absolute positions; tables: the
+    shared {"page_table", "cmp_table"} arrays.  Returns (logits (B,V), cache).
+    """
+    x = params["embed"][tokens]
+
+    def body(x, args):
+        p_l, c_l = args
+        h = rms_norm(x, p_l["ln1"], cfg.norm_eps)
+        h, c_l = attn.paged_attention_decode(p_l["attn"], h, c_l, tables, pos, cfg)
+        x = x + h
+        h = rms_norm(x, p_l["ln2"], cfg.norm_eps)
+        if cfg.moe is not None:
+            h2, _ = moe.apply_moe(p_l["moe"], h[:, None, :], cfg)
+            h = h2[:, 0]
+        else:
+            h = apply_mlp(p_l["mlp"], h, cfg.mlp)
+        return x + h, c_l
+
+    x, cl = jax.lax.scan(body, x, (params["layers"], cache["layers"]))
+    cache = dict(cache, layers=cl)
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    return _head(params, x[:, None], cfg)[:, 0], cache
+
+
+def lm_paged_prefill_chunk(params, cache, tokens_c, t0, length, tables, cfg):
+    """Prefill one chunk of ONE slot into paged storage.
+
+    tokens_c: (C,) int32 at absolute positions [t0, t0+C) (tail beyond
+    ``length`` is padding); tables: this slot's {"page_table", "cmp_table"}
+    rows.  Returns (logits (C, V), cache) — the engine reads the logit at
+    the prompt's last position from the final chunk.
+    """
+    x = params["embed"][tokens_c]                          # (C, D)
+
+    def body(x, args):
+        p_l, c_l = args
+        h = rms_norm(x, p_l["ln1"], cfg.norm_eps)
+        h, c_l = attn.paged_attention_prefill_chunk(
+            p_l["attn"], h, c_l, tables, t0, length, cfg)
+        x = x + h
+        h = rms_norm(x, p_l["ln2"], cfg.norm_eps)
+        if cfg.moe is not None:
+            h2, _ = moe.apply_moe(p_l["moe"], h[None], cfg)
+            h = h2[0]
+        else:
+            h = apply_mlp(p_l["mlp"], h, cfg.mlp)
+        return x + h, c_l
+
+    x, cl = jax.lax.scan(body, x, (params["layers"], cache["layers"]))
+    cache = dict(cache, layers=cl)
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    return _head(params, x[None], cfg)[0], cache
+
+
 def _decode_attn_block(p, x_t, cache, pos, cfg):
     h = rms_norm(x_t, p["ln1"], cfg.norm_eps)
     h, cache = attn.attention_decode(p["attn"], h, cache, pos, cfg)
@@ -322,7 +389,9 @@ def _decode_mamba_block(p, x_t, cache, cfg):
 
 
 def lm_decode_step(params, cache, tokens, pos, cfg):
-    """tokens: (B,) int32; pos: scalar. Returns (logits (B,V), cache)."""
+    """tokens: (B,) int32; pos: scalar or (B,) per-slot absolute positions
+    (continuous batching decodes every slot at its own depth).
+    Returns (logits (B,V), cache)."""
     x = params["embed"][tokens]
 
     if cfg.family == "hybrid":

@@ -32,6 +32,37 @@ DEFAULT_RULES: dict[str, object] = {
 _local = threading.local()
 
 
+def axis_size(axis: str) -> int:
+    """Size of a named mesh axis inside shard_map (jax.lax.axis_size is
+    missing on 0.4.x; psum of 1 is the portable spelling)."""
+    fn = getattr(jax.lax, "axis_size", None)
+    if fn is not None:
+        return fn(axis)
+    return jax.lax.psum(1, axis)
+
+
+def pvary(x, axes):
+    """jax.lax.pvary where it exists (newer shard_map varying-type checks);
+    identity on 0.4.x, which has no varying types."""
+    fn = getattr(jax.lax, "pvary", None)
+    if fn is not None:
+        return fn(x, axes)
+    return x
+
+
+def current_mesh():
+    """The ambient mesh (abstract on jax >= 0.5, physical on 0.4.x).
+
+    Both objects expose ``.empty``, ``.shape`` and ``.axis_names``, which is
+    all ``resolve``/``shard`` need.
+    """
+    get_abstract = getattr(jax.sharding, "get_abstract_mesh", None)
+    if get_abstract is not None:
+        return get_abstract()
+    from jax._src.mesh import thread_resources
+    return thread_resources.env.physical_mesh
+
+
 def current_rules() -> dict[str, object]:
     return getattr(_local, "rules", DEFAULT_RULES)
 
@@ -51,7 +82,7 @@ def resolve(*names: str | None, shape: tuple[int, ...] | None = None) -> P:
     """Map logical names to mesh axes; axes that do not divide the
     corresponding dim (e.g. 8 KV heads over a 16-way model axis) are dropped."""
     rules = current_rules()
-    mesh = jax.sharding.get_abstract_mesh()
+    mesh = current_mesh()
     sizes = dict(mesh.shape) if not mesh.empty else {}
     if shape is not None:  # tolerate rank mismatch (e.g. decode drops seq dim)
         names = tuple(names)[:len(shape)] + (None,) * max(0, len(shape) - len(names))
@@ -80,7 +111,7 @@ def resolve(*names: str | None, shape: tuple[int, ...] | None = None) -> P:
 def shard(x, *names: str | None):
     """Constrain activation ``x`` to the resolved logical sharding (no-op
     outside a mesh context)."""
-    mesh = jax.sharding.get_abstract_mesh()
+    mesh = current_mesh()
     if mesh.empty:
         return x
     return jax.lax.with_sharding_constraint(

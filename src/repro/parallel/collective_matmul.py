@@ -20,18 +20,20 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro.parallel.axes import axis_size, pvary
+
 
 def _ag_matmul_body(x_shard, w_local, *, axis: str):
     """x_shard: (S/n, D) local sequence shard; w_local: (D, F/n) local cols.
     Returns (S, F/n): the full-sequence activation for the local columns."""
-    n = jax.lax.axis_size(axis)
+    n = axis_size(axis)
     idx = jax.lax.axis_index(axis)
     s_shard = x_shard.shape[0]
     perm = [(i, (i + 1) % n) for i in range(n)]
 
     out = jnp.zeros((s_shard * n, w_local.shape[1]), x_shard.dtype)
     # mark the accumulator as device-varying for the shard_map scan typing
-    out = jax.lax.pvary(out, (axis,))
+    out = pvary(out, (axis,))
 
     def step(carry, i):
         x_cur, out = carry

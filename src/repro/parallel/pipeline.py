@@ -19,6 +19,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro.parallel.axes import axis_size, pvary
+
 
 def pipeline_forward(stage_fn, stage_params, x, *, axis: str = "pipe"):
     """Run inside shard_map over ``axis``.
@@ -30,7 +32,7 @@ def pipeline_forward(stage_fn, stage_params, x, *, axis: str = "pipe"):
     Returns (n_micro, B_micro, S, D) final-stage outputs (valid on the last
     stage; callers psum-select or gather as needed).
     """
-    n_stages = jax.lax.axis_size(axis)
+    n_stages = axis_size(axis)
     stage = jax.lax.axis_index(axis)
     n_micro = x.shape[0]
     ticks = n_micro + n_stages - 1
@@ -55,7 +57,7 @@ def pipeline_forward(stage_fn, stage_params, x, *, axis: str = "pipe"):
         nxt = jax.lax.ppermute(out, axis, perm)
         return (nxt, outputs), None
 
-    init = jax.lax.pvary((jnp.zeros_like(x[0]), jnp.zeros_like(x)), (axis,))
+    init = pvary((jnp.zeros_like(x[0]), jnp.zeros_like(x)), (axis,))
     (_, outputs), _ = jax.lax.scan(tick, init, jnp.arange(ticks))
     # broadcast final outputs from the last stage to all groups
     outputs = jax.lax.ppermute(

@@ -1,0 +1,15 @@
+"""repro.serving — paged NSA KV-cache + continuous-batching serving.
+
+Layout:
+  pages.py      fixed-size KV page pool + per-slot page tables
+  cache.py      PagedNSACache: raw-token and compressed-token pages
+  scheduler.py  admission queue, slot recycling, page reclamation
+  engine.py     chunked prefill + batched decode over per-slot positions
+"""
+from repro.serving.cache import PagedNSACache
+from repro.serving.engine import Engine
+from repro.serving.pages import PagePool, PageTable
+from repro.serving.scheduler import Request, Scheduler
+
+__all__ = ["Engine", "PagePool", "PageTable", "PagedNSACache", "Request",
+           "Scheduler"]

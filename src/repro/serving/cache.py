@@ -1,0 +1,149 @@
+"""PagedNSACache: paged raw-KV + compressed-token storage for all layers.
+
+Device state is a pytree of per-layer page pools (stacked over layers so the
+transformer's ``lax.scan`` carries it like the dense cache), plus two shared
+page tables (raw and compressed) — one allocation serves every layer, as in
+MaxText's page_manager / vLLM.
+
+Two pools because the two token kinds grow at different rates: raw pages at
+1 row/token, compressed pages at 1 row per ``cmp_stride`` tokens.  Page size
+is ``nsa.block_size`` for both, so the NSA selected branch addresses physical
+pages directly.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import transformer
+from repro.core.paging import gather_rows
+from repro.serving.pages import PagePool, PageTable, tables_array
+
+
+def _ceil_div(a: int, b: int) -> int:
+    return -(-a // b)
+
+
+class PagedNSACache:
+    """Paged decode cache for ``n_slots`` concurrent sequences.
+
+    ``data`` is the device pytree handed to the jitted model functions
+    (ownership transfers in/out each step so buffers can be donated).
+    """
+
+    def __init__(self, cfg, n_slots: int, max_len: int, *,
+                 num_pages: int | None = None):
+        if cfg.family in ("ssm", "hybrid", "encdec"):
+            raise NotImplementedError(
+                f"paged KV serving needs an attention cache; family "
+                f"'{cfg.family}' has recurrent/cross-attn state")
+        self.cfg = cfg
+        self.page_size = cfg.nsa.block_size
+        self.n_slots = n_slots
+        self.max_len = max_len
+        self.max_pages = _ceil_div(max_len, self.page_size)
+        # compressed tokens per slot at full depth, padded to whole pages
+        self.max_cmp_tokens = cfg.nsa.num_cmp_blocks(max_len)
+        self.max_cmp_pages = _ceil_div(self.max_cmp_tokens, self.page_size)
+        # +1 everywhere: page 0 is the reserved dump page
+        self.num_pages = (num_pages if num_pages is not None
+                          else n_slots * self.max_pages + 1)
+        self.num_cmp_pages = n_slots * self.max_cmp_pages + 1
+
+        self.pool = PagePool(self.num_pages, self.page_size)
+        self.cmp_pool = PagePool(self.num_cmp_pages, self.page_size)
+        self.tables = [PageTable(self.max_pages) for _ in range(n_slots)]
+        self.cmp_tables = [PageTable(self.max_cmp_pages) for _ in range(n_slots)]
+        self.lengths = np.zeros((n_slots,), np.int64)   # tokens written
+
+        self.data = transformer.init_lm_paged_cache(
+            cfg, self.num_pages, self.num_cmp_pages)
+        self._tables_dirty = True
+        self._dev_tables = None
+
+    # ------------------------------------------------------------- alloc
+    def pages_needed(self, capacity_tokens: int) -> tuple[int, int]:
+        """(raw, cmp) page count to hold ``capacity_tokens`` for one slot."""
+        raw = _ceil_div(capacity_tokens, self.page_size)
+        cmp_tokens = self.cfg.nsa.num_cmp_blocks(capacity_tokens)
+        return raw, _ceil_div(cmp_tokens, self.page_size)
+
+    def can_admit(self, capacity_tokens: int) -> bool:
+        raw, cmp = self.pages_needed(capacity_tokens)
+        return (raw <= self.max_pages and cmp <= self.max_cmp_pages
+                and self.pool.can_alloc(raw) and self.cmp_pool.can_alloc(cmp))
+
+    def alloc_slot(self, slot: int, capacity_tokens: int) -> bool:
+        """Reserve the slot's full worst-case page budget up front (simple
+        admission control: an admitted request can never OOM mid-flight)."""
+        raw_n, cmp_n = self.pages_needed(capacity_tokens)
+        if raw_n > self.max_pages or cmp_n > self.max_cmp_pages:
+            raise ValueError(
+                f"request needs {raw_n} pages > slot capacity {self.max_pages} "
+                f"(max_len={self.max_len})")
+        raw = self.pool.alloc(raw_n)
+        if raw is None:
+            return False
+        cmp = self.cmp_pool.alloc(cmp_n)
+        if cmp is None:
+            self.pool.free(raw)
+            return False
+        self.tables[slot].assign(raw)
+        self.cmp_tables[slot].assign(cmp)
+        self.lengths[slot] = 0
+        self._tables_dirty = True
+        return True
+
+    def free_slot(self, slot: int) -> None:
+        self.pool.free(self.tables[slot].clear())
+        self.cmp_pool.free(self.cmp_tables[slot].clear())
+        self.lengths[slot] = 0
+        self._tables_dirty = True
+
+    def reset(self) -> None:
+        for s in range(self.n_slots):
+            self.tables[s].clear()
+            self.cmp_tables[s].clear()
+        self.pool.reset()
+        self.cmp_pool.reset()
+        self.lengths[:] = 0
+        self._tables_dirty = True
+
+    # ----------------------------------------------------------- device IO
+    def device_tables(self) -> dict:
+        """{"page_table": (B, max_pages), "cmp_table": (B, max_cmp_pages)}."""
+        if self._tables_dirty:
+            self._dev_tables = {
+                "page_table": tables_array(self.tables),
+                "cmp_table": tables_array(self.cmp_tables),
+            }
+            self._tables_dirty = False
+        return self._dev_tables
+
+    def slot_tables(self, slot: int) -> dict:
+        dev = self.device_tables()
+        return {"page_table": dev["page_table"][slot],
+                "cmp_table": dev["cmp_table"][slot]}
+
+    def utilization(self) -> dict:
+        return {"raw": self.pool.utilization(),
+                "cmp": self.cmp_pool.utilization()}
+
+    # -------------------------------------------------- contiguous views
+    def gather_view(self, slot: int, layer: int = 0) -> dict:
+        """Dense (max_len, h_k, d) K/V (+ cmp) views of one slot — the shape
+        the dense cache stores directly.  Test/debug path: materialises the
+        whole slot, whereas decode reads only the pages the NSA branches
+        touch."""
+        t = self.slot_tables(slot)
+        lc = jax.tree.map(lambda a: a[layer], self.data["layers"])
+        rows = jnp.arange(self.max_pages * self.page_size)
+        out = {"k": gather_rows(lc["k_pages"], t["page_table"], rows),
+               "v": gather_rows(lc["v_pages"], t["page_table"], rows)}
+        if "cmp_k_pages" in lc:
+            crows = jnp.arange(self.max_cmp_pages * self.page_size)
+            out["cmp_k"] = gather_rows(lc["cmp_k_pages"], t["cmp_table"], crows)
+            out["cmp_v"] = gather_rows(lc["cmp_v_pages"], t["cmp_table"], crows)
+        return out

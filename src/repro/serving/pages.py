@@ -1,0 +1,94 @@
+"""Fixed-size KV page pool and per-slot page tables.
+
+Pages are the unit of KV-cache allocation (page size = ``nsa.block_size``
+tokens, so one NSA selected block == one physical page).  Allocation is
+host-side (the scheduler runs on the host anyway); the device sees only
+int32 page-table arrays, so jitted model functions never recompile as
+traffic changes.
+
+Page 0 of every pool is a reserved dump page: idle slots and masked writes
+are routed there, which keeps all scatters unconditional (no ragged shapes).
+
+The device-side row addressing lives in ``repro.core.paging`` (kernels and
+model layers use it too); re-exported here for convenience.
+"""
+from __future__ import annotations
+
+import collections
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.paging import gather_rows, scatter_rows
+
+__all__ = ["PagePool", "PageTable", "tables_array", "gather_rows",
+           "scatter_rows"]
+
+
+class PagePool:
+    """Host-side allocator over a fixed set of physical pages."""
+
+    def __init__(self, num_pages: int, page_size: int):
+        if num_pages < 2:
+            raise ValueError("need >= 2 pages (page 0 is the reserved dump page)")
+        self.num_pages = num_pages
+        self.page_size = page_size
+        self._free = collections.deque(range(1, num_pages))
+
+    @property
+    def available(self) -> int:
+        return len(self._free)
+
+    @property
+    def used(self) -> int:
+        return (self.num_pages - 1) - len(self._free)
+
+    def utilization(self) -> float:
+        return self.used / max(self.num_pages - 1, 1)
+
+    def can_alloc(self, n: int) -> bool:
+        return n <= len(self._free)
+
+    def alloc(self, n: int) -> list[int] | None:
+        """Pop ``n`` pages; None (and no side effect) if the pool is short."""
+        if n > len(self._free):
+            return None
+        return [self._free.popleft() for _ in range(n)]
+
+    def free(self, pages) -> None:
+        for p in pages:
+            if not 1 <= p < self.num_pages:
+                raise ValueError(f"freeing invalid page id {p}")
+            self._free.append(int(p))
+
+    def reset(self) -> None:
+        self._free = collections.deque(range(1, self.num_pages))
+
+
+class PageTable:
+    """Per-slot logical-block -> physical-page mapping (host side)."""
+
+    def __init__(self, max_pages: int):
+        self.max_pages = max_pages
+        self.pages: list[int] = []
+
+    def assign(self, pages: list[int]) -> None:
+        if len(pages) > self.max_pages:
+            raise ValueError(
+                f"{len(pages)} pages exceed slot capacity {self.max_pages}")
+        self.pages = list(pages)
+
+    def clear(self) -> list[int]:
+        pages, self.pages = self.pages, []
+        return pages
+
+    def as_row(self) -> np.ndarray:
+        """Dense (max_pages,) int32 row; unassigned entries -> dump page 0."""
+        row = np.zeros((self.max_pages,), np.int32)
+        row[: len(self.pages)] = self.pages
+        return row
+
+
+def tables_array(tables: list[PageTable]) -> jnp.ndarray:
+    """Stack per-slot tables into the device-side (n_slots, max_pages) array."""
+    return jnp.asarray(np.stack([t.as_row() for t in tables]))

@@ -1,0 +1,127 @@
+"""Continuous-batching scheduler: admission queue, slot recycling, page
+reclamation.
+
+Requests carry variable-length prompts.  A request is admitted when a decode
+slot is free AND the page pools can cover its full worst-case footprint
+(prompt rounded up to the prefill chunk + max_new tokens) — reserving up
+front means an admitted request can never OOM mid-flight.  On EOS /
+``max_new`` the slot is recycled and its pages return to the pool
+immediately, letting the next queued request in on the same engine tick.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+import itertools
+import time
+from typing import Optional
+
+import numpy as np
+
+from repro.serving.cache import PagedNSACache
+
+_RID = itertools.count()
+
+
+@dataclasses.dataclass
+class Request:
+    prompt: np.ndarray                      # (S,) int32, any length
+    max_new: int = 16
+    eos_id: Optional[int] = None
+    rid: int = dataclasses.field(default_factory=lambda: next(_RID))
+    out: list = dataclasses.field(default_factory=list)
+    state: str = "queued"                   # queued | active | done
+    slot: Optional[int] = None
+    submit_t: float = dataclasses.field(default_factory=time.time)
+    first_token_t: Optional[float] = None
+    finish_t: Optional[float] = None
+
+    def __post_init__(self):
+        self.prompt = np.asarray(self.prompt, np.int32).reshape(-1)
+        if self.prompt.size == 0:
+            raise ValueError("empty prompt")
+
+    @property
+    def done(self) -> bool:
+        return self.state == "done"
+
+
+class Scheduler:
+    """Maps queued requests onto cache slots; frees pages on completion."""
+
+    def __init__(self, cache: PagedNSACache, prefill_chunk: int):
+        self.cache = cache
+        self.prefill_chunk = prefill_chunk
+        self.queue: collections.deque[Request] = collections.deque()
+        self.slots: list[Request | None] = [None] * cache.n_slots
+        self.finished: list[Request] = []
+
+    # ------------------------------------------------------------- intake
+    def submit(self, req: Request) -> Request:
+        if len(req.prompt) + req.max_new > self.cache.max_len:
+            raise ValueError(
+                f"request {req.rid}: prompt {len(req.prompt)} + max_new "
+                f"{req.max_new} exceeds engine max_len {self.cache.max_len}")
+        # the chunk-rounded footprint must also fit one slot's page budget
+        # AND the (possibly smaller) physical pools, otherwise admit() could
+        # never place it (reject here, per request, rather than wedging the
+        # engine in an unadmittable busy-loop later)
+        raw_n, cmp_n = self.cache.pages_needed(self.capacity_tokens(req))
+        raw_cap = min(self.cache.max_pages, self.cache.pool.num_pages - 1)
+        cmp_cap = min(self.cache.max_cmp_pages,
+                      self.cache.cmp_pool.num_pages - 1)
+        if raw_n > raw_cap or cmp_n > cmp_cap:
+            raise ValueError(
+                f"request {req.rid}: prompt {len(req.prompt)} rounded to "
+                f"whole prefill chunks of {self.prefill_chunk} needs "
+                f"{raw_n}+{cmp_n} pages > capacity {raw_cap}+{cmp_cap} "
+                f"(max_len={self.cache.max_len}; raise max_len/num_pages or "
+                f"lower prefill_chunk)")
+        self.queue.append(req)
+        return req
+
+    def capacity_tokens(self, req: Request) -> int:
+        """Worst-case rows the slot must address: the prompt rounded up to
+        whole prefill chunks (padded chunk tails still write rows), plus the
+        decode budget."""
+        c = self.prefill_chunk
+        padded = -(-len(req.prompt) // c) * c
+        return max(padded, len(req.prompt) + req.max_new)
+
+    # ---------------------------------------------------------- admission
+    def admit(self) -> list[Request]:
+        """Move queued requests into free slots while pages allow (FIFO —
+        no head-of-line bypass, so admission latency stays predictable)."""
+        admitted = []
+        while self.queue:
+            try:
+                slot = self.slots.index(None)
+            except ValueError:
+                break
+            req = self.queue[0]
+            if not self.cache.alloc_slot(slot, self.capacity_tokens(req)):
+                break
+            self.queue.popleft()
+            req.state, req.slot = "active", slot
+            self.slots[slot] = req
+            admitted.append(req)
+        return admitted
+
+    def release(self, req: Request) -> None:
+        req.state = "done"
+        req.finish_t = time.time()
+        self.cache.free_slot(req.slot)
+        self.slots[req.slot] = None
+        self.finished.append(req)
+
+    # ------------------------------------------------------------- state
+    @property
+    def active(self) -> list[Request]:
+        return [r for r in self.slots if r is not None]
+
+    @property
+    def pending(self) -> int:
+        return len(self.queue)
+
+    def idle(self) -> bool:
+        return not self.queue and all(r is None for r in self.slots)

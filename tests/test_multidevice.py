@@ -12,14 +12,14 @@ SCRIPT = textwrap.dedent("""
     import warnings; warnings.filterwarnings("ignore")
     import jax, jax.numpy as jnp
     import numpy as np
-    from repro.launch.mesh import make_mesh
+    from repro.launch.mesh import make_mesh, mesh_context
 
     # ---- collective matmul == all_gather + matmul ----
     from repro.parallel.collective_matmul import all_gather_matmul
     mesh = make_mesh((8,), ("model",))
     x = jax.random.normal(jax.random.PRNGKey(0), (64, 32))
     w = jax.random.normal(jax.random.PRNGKey(1), (32, 48))
-    with jax.set_mesh(mesh):
+    with mesh_context(mesh):
         y = jax.jit(lambda x, w: all_gather_matmul(x, w, mesh))(x, w)
     np.testing.assert_allclose(np.asarray(y), np.asarray(x @ w),
                                rtol=2e-4, atol=2e-4)
@@ -36,7 +36,7 @@ SCRIPT = textwrap.dedent("""
     for i in range(n_layers):
         ref = jnp.tanh(ref @ ws[i])
     fn = make_pipelined_backbone(block, n_layers, 4, mesh_p)
-    with jax.set_mesh(mesh_p):
+    with mesh_context(mesh_p):
         out = jax.jit(fn)(ws, xs)
     np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
                                rtol=2e-4, atol=2e-4)
@@ -56,7 +56,7 @@ SCRIPT = textwrap.dedent("""
     model = build(cfg)
     ns = lambda t: jax.tree.map(lambda s: NamedSharding(mesh2, s), t,
                                 is_leaf=lambda s: isinstance(s, P))
-    with jax.set_mesh(mesh2):
+    with mesh_context(mesh2):
         params = model.init(jax.random.PRNGKey(0))
         pspecs = partition.param_specs(params, mesh2)
         from repro.optim import opt_state_specs
