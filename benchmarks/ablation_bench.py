@@ -21,7 +21,7 @@ import jax.numpy as jnp
 
 from repro.core import NSAConfig, indexing
 from repro.core.selection import select_blocks
-from repro.kernels import fsa_selected, ops, ref
+from repro.kernels import fsa_selected, ref
 
 
 def _t(fn, reps=3):

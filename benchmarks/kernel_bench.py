@@ -7,15 +7,25 @@ This container has no TPU, so two complementary measurements are reported:
   2. the analytic latency projection at the paper's shapes on TPU v5e
      (197 TFLOP/s bf16, 819 GB/s HBM): t = max(flops/peak, bytes/bw) from the
      §3.3 model — the roofline-derived Fig. 4 twin, per (g, B_K, T, N).
+
+``--json-out PATH`` writes the rows as a BENCH_kernel.json trajectory point
+(shared writer in ``benchmarks/results.py``); ``--tiny`` shrinks shapes for
+the CI bench-smoke job.
 """
 from __future__ import annotations
 
+import argparse
 import time
 
 import jax
 import jax.numpy as jnp
 
-from benchmarks import analytic_model as am
+try:
+    from benchmarks import analytic_model as am
+    from benchmarks.results import write_results
+except ImportError:      # script-style run: benchmarks/ itself is sys.path[0]
+    import analytic_model as am
+    from results import write_results
 from repro.core import NSAConfig
 from repro.core.selection import select_blocks
 from repro.kernels import ops
@@ -50,7 +60,33 @@ def cpu_kernel_times(n=256, g=2, h_k=2, d=32, b_k=16, t_sel=4):
         rows.append((f"selected/{kern}", time_call(fn, q, k, v)))
     fn = jax.jit(lambda q, k, v: ops.full_attention(q, k, v, base))
     rows.append(("full/flash", time_call(fn, q, k, v)))
+    rows.append(("paged_decode/kernel",
+                 paged_decode_time(b_k=b_k, t_sel=t_sel, h_k=h_k, g=g, d=d)))
     return rows
+
+
+def paged_decode_time(*, b_k=16, t_sel=4, h_k=2, g=2, d=32, slots=4,
+                      max_pages=8):
+    """Interpret-mode latency of one batched paged-decode dispatch."""
+    cfg = NSAConfig(block_size=b_k, num_selected=t_sel, cmp_block_size=8,
+                    cmp_stride=4, window_size=2 * b_k, q_block_size=32)
+    h = h_k * g
+    num_pages = slots * max_pages + 1
+    n_cmp = cfg.num_cmp_blocks(max_pages * b_k)
+    ks = jax.random.split(jax.random.PRNGKey(1), 6)
+    q = jax.random.normal(ks[0], (slots, h, d))
+    gates = jax.nn.softmax(jax.random.normal(ks[1], (slots, h, 3)), -1)
+    k_pages = jax.random.normal(ks[2], (num_pages, b_k, h_k, d))
+    v_pages = jax.random.normal(ks[3], (num_pages, b_k, h_k, d))
+    cmp_k = jax.random.normal(ks[4], (slots, n_cmp, h_k, d))
+    cmp_v = jax.random.normal(ks[5], (slots, n_cmp, h_k, d))
+    tables = (1 + jnp.arange(slots * max_pages, dtype=jnp.int32)
+              ).reshape(slots, max_pages)
+    pos = jnp.full((slots,), max_pages * b_k - 1, jnp.int32)
+    fn = jax.jit(lambda q, ck, cv: ops.paged_decode_attention_batched(
+        gates, q, k_pages, v_pages, tables, ck, cv, pos, cfg,
+        use_kernel=True))
+    return time_call(fn, q, cmp_k, cmp_v)
 
 
 def v5e_projection():
@@ -78,15 +114,31 @@ def v5e_projection():
     return rows
 
 
-def main():
-    for name, us in cpu_kernel_times():
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--json-out", default=None,
+                    help="write a BENCH_kernel.json trajectory point here")
+    ap.add_argument("--tiny", action="store_true",
+                    help="CI bench-smoke shapes (smaller N)")
+    args = ap.parse_args(argv)
+
+    shape = dict(n=64, b_k=8, t_sel=2) if args.tiny else {}
+    cpu_rows = cpu_kernel_times(**shape)
+    for name, us in cpu_rows:
         print(f"kernel_bench,{name}_cpu_interpret,{us:.0f}")
+    proj = v5e_projection()
     print("kernel_bench_v5e,N,B_K,T,g,fsa_us,nsa_us,full_us,speedup_vs_nsa,"
           "speedup_vs_full")
-    for r in v5e_projection():
+    for r in proj:
         print(f"kernel_bench_v5e,{r['N']},{r['B_K']},{r['T']},{r['g']},"
               f"{r['fsa_us']:.1f},{r['nsa_us']:.1f},{r['full_us']:.1f},"
               f"{r['speedup_vs_nsa']:.2f},{r['speedup_vs_full']:.2f}")
+    if args.json_out:
+        write_results(args.json_out, "kernel_bench", {
+            "cpu_interpret_us": dict(cpu_rows),
+            "v5e_projection": proj,
+            "tiny": args.tiny,
+        })
 
 
 if __name__ == "__main__":

@@ -1,0 +1,45 @@
+"""Machine-readable benchmark results writer, shared by the bench CLIs and
+the CI bench-smoke job.
+
+Every benchmark that wants a perf-trajectory point calls ``write_results``
+with a flat-ish payload dict; the file lands as ``BENCH_<name>.json`` with a
+small envelope (bench name, schema version, environment fingerprint) so
+points from different commits / jax versions remain comparable.
+"""
+from __future__ import annotations
+
+import json
+import platform
+import sys
+import time
+
+SCHEMA_VERSION = 1
+
+
+def environment() -> dict:
+    """Versions that perf points must be keyed on to stay comparable."""
+    import jax
+
+    return {
+        "python": platform.python_version(),
+        "jax": jax.__version__,
+        "backend": jax.default_backend(),
+        "device_count": jax.device_count(),
+        "platform": platform.platform(),
+    }
+
+
+def write_results(path: str, name: str, payload: dict) -> dict:
+    """Write one bench-trajectory point to ``path`` (JSON). Returns the doc."""
+    doc = {
+        "bench": name,
+        "schema_version": SCHEMA_VERSION,
+        "unix_time": time.time(),
+        "environment": environment(),
+        "results": payload,
+    }
+    with open(path, "w") as f:
+        json.dump(doc, f, indent=2, sort_keys=True, default=float)
+        f.write("\n")
+    print(f"[{name}] wrote {path}", file=sys.stderr)
+    return doc

@@ -7,6 +7,10 @@ page reclamation.  Reports tokens/sec (decode + prefill), latency, and
 page-pool utilization.
 
 Run:  PYTHONPATH=src python benchmarks/serve_bench.py --arch codeqwen1.5-7b
+
+``--json-out PATH`` writes a BENCH_serve.json trajectory point (shared
+writer in ``benchmarks/results.py``) — the CI bench-smoke job uploads it as
+a workflow artifact.
 """
 from __future__ import annotations
 
@@ -15,15 +19,20 @@ import time
 
 import numpy as np
 
+try:
+    from benchmarks.results import write_results
+except ImportError:      # script-style run: benchmarks/ itself is sys.path[0]
+    from results import write_results
 from repro.configs import get_config, reduced
 from repro.serving import Engine
 
 
 def run_workload(cfg, *, slots, n_requests, min_prompt, max_prompt, new_tokens,
-                 release_every, prefill_chunk=None, seed=0, quiet=False):
+                 release_every, prefill_chunk=None, seed=0, quiet=False,
+                 use_kernel=None):
     """Release requests gradually; drive the engine until drained."""
     eng = Engine(cfg, n_slots=slots, max_len=max_prompt + new_tokens + 8,
-                 prefill_chunk=prefill_chunk)
+                 prefill_chunk=prefill_chunk, use_kernel=use_kernel)
     rng = np.random.default_rng(seed)
     pending = [rng.integers(0, cfg.vocab, size=(int(rng.integers(
         min_prompt, max_prompt + 1)),)) for _ in range(n_requests)]
@@ -44,6 +53,7 @@ def run_workload(cfg, *, slots, n_requests, min_prompt, max_prompt, new_tokens,
     out = {
         "requests": len(reqs),
         "prompt_lens": [len(r.prompt) for r in reqs],
+        "decode_kernel": bool(eng.cfg.nsa.paged_kernel),
         "wall_s": wall,
         "decode_tok_s": s["decode_tokens_per_s"],
         "prefill_tok_s": s["prefill_tokens_per_s"],
@@ -78,14 +88,24 @@ def main():
                     help="engine ticks between request releases")
     ap.add_argument("--full-size", action="store_true",
                     help="run the full-size config (default: reduced CPU)")
+    ap.add_argument("--no-kernel", action="store_true",
+                    help="decode via the gather reference instead of the "
+                         "Pallas paged-decode kernel")
+    ap.add_argument("--json-out", default=None,
+                    help="write a BENCH_serve.json trajectory point here")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
     if not args.full_size:
         cfg = reduced(cfg)
-    run_workload(cfg, slots=args.slots, n_requests=args.requests,
-                 min_prompt=args.min_prompt, max_prompt=args.max_prompt,
-                 new_tokens=args.new_tokens, release_every=args.release_every)
+    out = run_workload(cfg, slots=args.slots, n_requests=args.requests,
+                       min_prompt=args.min_prompt, max_prompt=args.max_prompt,
+                       new_tokens=args.new_tokens,
+                       release_every=args.release_every,
+                       use_kernel=False if args.no_kernel else None)
+    if args.json_out:
+        write_results(args.json_out, "serve_bench",
+                      dict(out, arch=args.arch, full_size=args.full_size))
 
 
 if __name__ == "__main__":

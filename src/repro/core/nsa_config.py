@@ -32,6 +32,15 @@ class NSAConfig:
     kernel: str = "fsa"           # fsa | fsa_faithful | nsa | reference
     interpret: bool = True        # Pallas interpret mode (no TPU in container)
 
+    # --- paged-decode (serving) kernel knobs ---
+    # paged_kernel picks the batched decode implementation on paged storage:
+    # True -> the Pallas kernel in kernels/paged_decode.py (slots folded into
+    # the MXU M dim, kv index_map composed through the page table);
+    # False -> the vmapped gather reference.  paged_slot_block is the number
+    # of slots folded per M block (0 = auto: fill M to >= 8 rows).
+    paged_kernel: bool = True
+    paged_slot_block: int = 0
+
     # --- sparse (XLA) path strategy for the selected branch ---
     # "union":  FSA organization in XLA ops — per query chunk, gather the
     #           union of selected KV blocks ONCE and mask (block-batched,

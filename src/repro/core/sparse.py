@@ -274,8 +274,8 @@ def decode_cmp_and_select(q_c, k_cmp, v_cmp, pos, cfg: NSAConfig,
                           seq_len: int):
     """Shared one-token decode prologue: compressed-branch attention + top-T
     block selection.  Used by both the dense-cache decode below and the
-    paged decode in ``kernels.ops.paged_decode_attention`` so the two paths
-    stay provably identical.
+    paged decode in ``kernels.ops.paged_decode_attention_batched`` (kernel
+    and gather-reference paths alike) so the paths stay provably identical.
 
     q_c: (1, h, d); k_cmp/v_cmp: (N_cmp, h_k, d); pos: scalar; seq_len: raw
     KV span (block ids index [0, num_kv_blocks(seq_len))).

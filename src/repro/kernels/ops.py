@@ -26,6 +26,7 @@ from repro.kernels import flash_attention as _flash
 from repro.kernels import fsa_faithful as _faithful
 from repro.kernels import fsa_selected as _fsa
 from repro.kernels import nsa_selected as _nsa
+from repro.kernels import paged_decode as _paged
 from repro.kernels import ref as _ref
 
 
@@ -165,45 +166,17 @@ def _flash_bwd(cfg, causal, window, res, dout):
 _flash_op.defvjp(_flash_fwd, _flash_bwd)
 
 
-def paged_decode_attention(gates, q, k_pages, v_pages, page_table,
-                           cmp_k, cmp_v, pos, cfg: NSAConfig, *,
-                           use_kernel: bool = False):
-    """One-token NSA decode reading KV through a page table — touches ONLY
-    the pages the three branches address (page size == B_K, so one selected
-    block is one physical page):
-
-      compressed  all compressed-token rows (already gathered views — they
-                  are O(N/stride) small)
-      selected    the T pages named by ``page_table[idx]``
-      sliding     the trailing ceil(W/B_K)+1 pages
-
-    q: (h, d); k_pages/v_pages: (N_pages, P, h_k, d*); page_table:
-    (max_pages,) int32; cmp_k/cmp_v: (N_cmp_max, h_k, d*); pos: scalar.
-
-    This is the gather-through-page-table reference path.  ``use_kernel`` is
-    the Pallas hook point: the selected branch maps onto ``fsa_selected``'s
-    BlockSpec pattern with the kv index_map composed through the page table
-    (ids -> page_table[ids]), which keeps HBM reads at page granularity.
+def _paged_sel_win_ref(q, k_pages, v_pages, page_table, idx, valid, pos,
+                       cfg: NSAConfig):
+    """Gather-through-page-table reference for ONE slot's selected + sliding
+    branches.  q: (h, d); idx/valid: (h_k, T); pos: scalar.
+    Returns (out_sel, out_win): each (h, dv) float32.
     """
-    if use_kernel:
-        raise NotImplementedError(
-            "Pallas paged decode: compose fsa_selected's kv index_map through "
-            "the page table (see kernels/fsa_selected.py)")
     from repro.core.reference import _gqa_out, _gqa_scores, _safe_softmax
 
     h, d = q.shape
-    n_pages_max, p_sz, h_k, _ = k_pages.shape
-    assert p_sz == cfg.block_size, "page size must equal the NSA block size"
+    p_sz, h_k = k_pages.shape[1], k_pages.shape[2]
     g = h // h_k
-    max_pages = page_table.shape[0]
-    s_max = max_pages * p_sz
-    q_c = q[None]                                           # (1, h, d)
-
-    # --- compressed branch + top-T selection (shared with the dense path;
-    #     logical block id == page-table index) ---
-    out_cmp, idx, valid = sparse.decode_cmp_and_select(
-        q_c, cmp_k, cmp_v, pos, cfg, s_max)
-    idx, valid = idx[0], valid[0]                           # (h_k, T)
 
     # --- selected branch: gather exactly the T physical pages per KV head
     #     (each head pulls only its own rows of its own pages) ---
@@ -221,7 +194,6 @@ def paged_decode_attention(gates, q, k_pages, v_pages, page_table,
     s_sel = s_sel / jnp.sqrt(d).astype(jnp.float32)
     p_sel, _ = _safe_softmax(s_sel, sel_mask[:, None, :])
     out_sel = jnp.einsum("kgs,ksd->kgd", p_sel, v_sel.astype(jnp.float32))
-    out_sel = out_sel.reshape(1, h, -1)
 
     # --- sliding branch: the trailing window through the page table ---
     w = cfg.window_size
@@ -229,14 +201,101 @@ def paged_decode_attention(gates, q, k_pages, v_pages, page_table,
     k_win = gather_rows(k_pages, page_table, win_rows)      # (W, h_k, d)
     v_win = gather_rows(v_pages, page_table, win_rows)
     win_mask = (win_rows >= 0) & (win_rows <= pos)
-    p_win, _ = _safe_softmax(_gqa_scores(q_c, k_win), win_mask[None, None, :])
-    out_win = _gqa_out(p_win, v_win)
+    p_win, _ = _safe_softmax(_gqa_scores(q[None], k_win),
+                             win_mask[None, None, :])
+    out_win = _gqa_out(p_win, v_win)[0]
+    return out_sel.reshape(h, -1), out_win
 
-    gf = gates.astype(jnp.float32)[None]
+
+def paged_decode_attention_batched(gates, q, k_pages, v_pages, page_tables,
+                                   cmp_k, cmp_v, pos, cfg: NSAConfig, *,
+                                   use_kernel: bool = False,
+                                   block_s: int | None = None):
+    """Batched multi-slot NSA decode reading KV through per-slot page tables —
+    touches ONLY the pages the three branches address (page size == B_K, so
+    one selected block is one physical page):
+
+      compressed  all compressed-token rows (already gathered views — they
+                  are O(N/stride) small)
+      selected    the T pages named by ``page_table[idx]`` per slot
+      sliding     the trailing ceil(W/B_K)+1 pages per slot
+
+    gates: (B, h, 3); q: (B, h, d); k_pages/v_pages: (N_pages, P, h_k, d*);
+    page_tables: (B, max_pages) int32; cmp_k/cmp_v: (B, N_cmp_max, h_k, d*);
+    pos: (B,).  Returns (B, h, dv).
+
+    ``use_kernel=True`` runs the Pallas paged-decode kernel: ``fsa_selected``'s
+    BlockSpec pattern with the kv index_map composed through the page table
+    (ids -> page_table[ids]) and B slots folded into the matmul M dimension —
+    one launch per engine tick.  ``use_kernel=False`` is the gather reference
+    (still a single batched dispatch, vmapped over slots).  The compressed
+    prologue is shared with the dense-cache decode via
+    ``sparse.decode_cmp_and_select`` on both paths.
+    """
+    b, h, d = q.shape
+    p_sz, h_k = k_pages.shape[1], k_pages.shape[2]
+    assert p_sz == cfg.block_size, "page size must equal the NSA block size"
+    g = h // h_k
+    s_max = page_tables.shape[1] * p_sz
+
+    # --- compressed branch + top-T selection (shared with the dense path;
+    #     logical block id == page-table index) ---
+    out_cmp, idx, valid = jax.vmap(
+        lambda q1, ck, cv, p1: sparse.decode_cmp_and_select(
+            q1[None], ck, cv, p1, cfg, s_max))(q, cmp_k, cmp_v, pos)
+    out_cmp = out_cmp[:, 0]                                  # (B, h, dv)
+    idx, valid = idx[:, 0], valid[:, 0]                      # (B, h_k, T)
+
+    if use_kernel:
+        bs = block_s or cfg.paged_slot_block or max(1, -(-8 // g))
+        bs = min(bs, b)
+        pad = (-b) % bs
+        if pad:
+            q_p = jnp.pad(q, ((0, pad), (0, 0), (0, 0)))
+            tables_p = jnp.pad(page_tables, ((0, pad), (0, 0)))
+            idx_p = jnp.pad(idx, ((0, pad), (0, 0), (0, 0)))
+            valid_p = jnp.pad(valid, ((0, pad), (0, 0), (0, 0)))
+            pos_p = jnp.pad(pos, ((0, pad),))
+        else:
+            q_p, tables_p, idx_p, valid_p, pos_p = (q, page_tables, idx,
+                                                    valid, pos)
+        bp = b + pad
+        pages, blks = _paged.build_decode_steps(
+            idx_p, valid_p, tables_p, pos_p, window=cfg.window_size,
+            page_size=p_sz, block_s=bs)
+        q_rows = (q_p.reshape(bp, h_k, g, d).transpose(1, 0, 2, 3)
+                     .reshape(h_k, bp * g, d))
+        o_sel, o_win = _paged.paged_decode(
+            q_rows, k_pages, v_pages, pages, blks, pos_p.astype(jnp.int32),
+            g=g, block_s=bs, num_sel=idx.shape[-1], window=cfg.window_size,
+            interpret=cfg.interpret)
+        dv = o_sel.shape[-1]
+        unfold = lambda o: (o.reshape(h_k, bp, g, dv).transpose(1, 0, 2, 3)
+                             .reshape(bp, h, dv)[:b])
+        out_sel, out_win = unfold(o_sel), unfold(o_win)
+    else:
+        out_sel, out_win = jax.vmap(
+            lambda q1, tb, i1, v1, p1: _paged_sel_win_ref(
+                q1, k_pages, v_pages, tb, i1, v1, p1, cfg))(
+                    q, page_tables, idx, valid, pos)
+
+    gf = gates.astype(jnp.float32)
     out = (gf[..., 0:1] * out_cmp.astype(jnp.float32)
-           + gf[..., 1:2] * out_sel.astype(jnp.float32)
-           + gf[..., 2:3] * out_win.astype(jnp.float32))
-    return out[0].astype(q.dtype)
+           + gf[..., 1:2] * out_sel
+           + gf[..., 2:3] * out_win)
+    return out.astype(q.dtype)
+
+
+def paged_decode_attention(gates, q, k_pages, v_pages, page_table,
+                           cmp_k, cmp_v, pos, cfg: NSAConfig, *,
+                           use_kernel: bool = False):
+    """One-token (single-slot) NSA paged decode; see
+    ``paged_decode_attention_batched`` for the semantics.  q: (h, d);
+    page_table: (max_pages,); cmp_k/cmp_v: (N_cmp_max, h_k, d*); pos: scalar.
+    """
+    return paged_decode_attention_batched(
+        gates[None], q[None], k_pages, v_pages, page_table[None],
+        cmp_k[None], cmp_v[None], pos[None], cfg, use_kernel=use_kernel)[0]
 
 
 def full_attention(q, k, v, cfg: NSAConfig, *, causal: bool = True):

@@ -23,13 +23,11 @@ import argparse
 import dataclasses
 import json
 import pathlib
-import re
 import sys
 import time
 import traceback
 
 import jax
-import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.configs import SHAPES, all_configs, get_config

@@ -14,16 +14,13 @@ Example (CPU, ~100M model):
 from __future__ import annotations
 
 import argparse
-import dataclasses
-import json
 import time
 
 import jax
-import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.checkpoint import ckpt
-from repro.configs import SHAPES, get_config, reduced
+from repro.configs import get_config, reduced
 from repro.data.pipeline import DataConfig, SyntheticLM
 from repro.launch.mesh import make_mesh, mesh_context
 from repro.launch.steps import make_train_step

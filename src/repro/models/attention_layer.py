@@ -323,7 +323,9 @@ def paged_attention_decode(p, x_t, layer_cache, tables, pos, cfg):
 
     The NSA path reads only the pages its branches touch: compressed pages,
     the top-T selected pages (page == NSA block), and the sliding-window
-    pages — via ``kernels.ops.paged_decode_attention``.
+    pages — one batched dispatch via
+    ``kernels.ops.paged_decode_attention_batched`` (the Pallas paged-decode
+    kernel when ``cfg.nsa.paged_kernel``).
     """
     from repro.kernels import ops
     b = x_t.shape[0]
@@ -344,10 +346,12 @@ def paged_attention_decode(p, x_t, layer_cache, tables, pos, cfg):
             layer_cache["cmp_k_pages"], tables["cmp_table"], cmp_rows)
         cmp_v = jax.vmap(gather_rows, in_axes=(None, 0, None))(
             layer_cache["cmp_v_pages"], tables["cmp_table"], cmp_rows)
-        fn = lambda q1, tb, ck, cv, g1, p1: ops.paged_decode_attention(
-            g1, q1, layer_cache["k_pages"], layer_cache["v_pages"],
-            tb, ck, cv, p1, cfg.nsa)
-        o = jax.vmap(fn)(q[:, 0], tables["page_table"], cmp_k, cmp_v, gates, pos)
+        # one batched dispatch for the whole slot batch (the Pallas paged
+        # kernel when cfg.nsa.paged_kernel, else the vmapped gather reference)
+        o = ops.paged_decode_attention_batched(
+            gates, q[:, 0], layer_cache["k_pages"], layer_cache["v_pages"],
+            tables["page_table"], cmp_k, cmp_v, pos, cfg.nsa,
+            use_kernel=cfg.nsa.paged_kernel)
     else:
         # full / swa reference: gather the visible span through the page table
         span = tables["page_table"].shape[1] * cfg.nsa.block_size
@@ -374,30 +378,37 @@ def paged_attention_decode(p, x_t, layer_cache, tables, pos, cfg):
     return _out_proj(p, o, cfg)[:, 0], layer_cache
 
 
-def paged_attention_prefill_chunk(p, x_c, layer_cache, tables, t0, length, cfg):
-    """Chunked prefill of ONE slot into paged storage.
+def paged_attention_prefill_chunks(p, x_c, layer_cache, tables, t0, length,
+                                   cfg):
+    """Chunked prefill of a BATCH of slots into paged storage — one dispatch.
 
-    x_c: (C, D) chunk of hidden states at absolute positions [t0, t0+C);
-    tables: {"page_table": (max_pages,), "cmp_table": (max_cmp_pages,)};
-    length: scalar — true prompt length (chunk tail beyond it is padding).
-    Attends chunk queries against the whole paged prefix (causally masked),
-    so chunks can be streamed through a fixed-shape jit at any prompt length.
+    x_c: (B, C, D) per-slot chunks of hidden states at absolute positions
+    [t0_b, t0_b + C); tables: {"page_table": (B, max_pages), "cmp_table":
+    (B, max_cmp_pages)}; t0/length: (B,) per-slot chunk offset and true
+    prompt length.  Slots whose chunk lies entirely beyond their prompt (or
+    padding slots with an all-dump-page table) write only to the dump page
+    and contribute masked (zero) outputs, so a fixed-shape jit streams any
+    mix of prompt lengths.  Attends chunk queries against the whole paged
+    prefix (causally masked).
     """
-    c = x_c.shape[0]
-    pos_c = t0 + jnp.arange(c)                                     # (C,)
-    q, k, v = _qkv(p, x_c[None], cfg, pos_c[None])
-    q, k, v = q[0], k[0], v[0]                                     # (C,h,d)...
+    b, c, _ = x_c.shape
+    pos_c = t0[:, None] + jnp.arange(c)                            # (B, C)
+    q, k, v = _qkv(p, x_c, cfg, pos_c)                             # (B,C,h,d)…
     layer_cache = dict(layer_cache)
     layer_cache["k_pages"] = scatter_rows(
-        layer_cache["k_pages"], tables["page_table"][None], pos_c[None], k[None])
+        layer_cache["k_pages"], tables["page_table"], pos_c, k,
+        valid=pos_c < length[:, None])
     layer_cache["v_pages"] = scatter_rows(
-        layer_cache["v_pages"], tables["page_table"][None], pos_c[None], v[None])
+        layer_cache["v_pages"], tables["page_table"], pos_c, v,
+        valid=pos_c < length[:, None])
 
-    s_max = tables["page_table"].shape[0] * cfg.nsa.block_size
+    s_max = tables["page_table"].shape[1] * cfg.nsa.block_size
     view_rows = jnp.arange(s_max)
-    k_view = gather_rows(layer_cache["k_pages"], tables["page_table"], view_rows)
-    v_view = gather_rows(layer_cache["v_pages"], tables["page_table"], view_rows)
-    q_mask = pos_c < length                                        # padding tail
+    k_view = jax.vmap(gather_rows, in_axes=(None, 0, None))(
+        layer_cache["k_pages"], tables["page_table"], view_rows)   # (B,S,hk,d)
+    v_view = jax.vmap(gather_rows, in_axes=(None, 0, None))(
+        layer_cache["v_pages"], tables["page_table"], view_rows)
+    q_mask = pos_c < length[:, None]                               # padding
 
     if cfg.attention == "nsa":
         nsa = cfg.nsa
@@ -406,38 +417,60 @@ def paged_attention_prefill_chunk(p, x_c, layer_cache, tables, t0, length, cfg):
         # ends e(j) = j*st + l - 1 in [t0, t0+C)  ->  at most C//st + 1 tokens
         max_emit = c // st + 1
         j0 = jnp.maximum(-((l - 1 - t0) // st), 0)     # ceil((t0-l+1)/st)
-        js = j0 + jnp.arange(max_emit)                             # (E,)
+        js = j0[:, None] + jnp.arange(max_emit)                    # (B, E)
         ends = js * st + l - 1
-        ok = (ends >= t0) & (ends < t0 + c) & (ends < length)
-        wrows = (js * st)[:, None] + jnp.arange(l)[None, :]        # (E, l)
-        win_k = jax.vmap(gather_rows, in_axes=(None, None, 0))(
-            layer_cache["k_pages"], tables["page_table"], wrows)
-        win_v = jax.vmap(gather_rows, in_axes=(None, None, 0))(
-            layer_cache["v_pages"], tables["page_table"], wrows)
-        ck, cv = _emit_cmp_token(p, cfg, win_k, win_v)             # (E,hk,d)
+        ok = ((ends >= t0[:, None]) & (ends < t0[:, None] + c)
+              & (ends < length[:, None]))
+        wrows = (js * st)[:, :, None] + jnp.arange(l)[None, None, :]  # (B,E,l)
+        gather_w = jax.vmap(jax.vmap(gather_rows, in_axes=(None, None, 0)),
+                            in_axes=(None, 0, 0))
+        win_k = gather_w(layer_cache["k_pages"], tables["page_table"], wrows)
+        win_v = gather_w(layer_cache["v_pages"], tables["page_table"], wrows)
+        ck, cv = _emit_cmp_token(p, cfg, win_k.reshape((b * max_emit,) + win_k.shape[2:]),
+                                 win_v.reshape((b * max_emit,) + win_v.shape[2:]))
+        ck = ck.reshape((b, max_emit) + ck.shape[1:])              # (B,E,hk,d)
+        cv = cv.reshape((b, max_emit) + cv.shape[1:])
         layer_cache["cmp_k_pages"] = scatter_rows(
-            layer_cache["cmp_k_pages"], tables["cmp_table"][None], js[None],
-            ck[None], valid=ok[None])
+            layer_cache["cmp_k_pages"], tables["cmp_table"], js, ck, valid=ok)
         layer_cache["cmp_v_pages"] = scatter_rows(
-            layer_cache["cmp_v_pages"], tables["cmp_table"][None], js[None],
-            cv[None], valid=ok[None])
+            layer_cache["cmp_v_pages"], tables["cmp_table"], js, cv, valid=ok)
 
-        n_cmp_max = tables["cmp_table"].shape[0] * nsa.block_size
+        n_cmp_max = tables["cmp_table"].shape[1] * nsa.block_size
         cmp_rows = jnp.arange(n_cmp_max)
-        cmp_k = gather_rows(layer_cache["cmp_k_pages"], tables["cmp_table"], cmp_rows)
-        cmp_v = gather_rows(layer_cache["cmp_v_pages"], tables["cmp_table"], cmp_rows)
-        gates = gating.apply_gates(p["nsa"], x_c)                  # (C,h,3)
+        cmp_k = jax.vmap(gather_rows, in_axes=(None, 0, None))(
+            layer_cache["cmp_k_pages"], tables["cmp_table"], cmp_rows)
+        cmp_v = jax.vmap(gather_rows, in_axes=(None, 0, None))(
+            layer_cache["cmp_v_pages"], tables["cmp_table"], cmp_rows)
+        gates = gating.apply_gates(p["nsa"], x_c)                  # (B,C,h,3)
         sel_map = jnp.asarray(compression.cmp_to_sel_map(
             n_cmp_max, nsa.num_kv_blocks(s_max), nsa))
-        o, _ = sparse._nsa_chunk(p["nsa"], nsa, k_view, v_view, cmp_k, cmp_v,
-                                 sel_map, (q, gates, pos_c))
+        o, _ = jax.vmap(
+            lambda kv1, vv1, ck1, cv1, q1, g1, p1: sparse._nsa_chunk(
+                p["nsa"], nsa, kv1, vv1, ck1, cv1, sel_map, (q1, g1, p1)))(
+                    k_view, v_view, cmp_k, cmp_v, q, gates, pos_c)
     else:
         key_pos = jnp.arange(s_max)
-        mask = key_pos[None, :] <= pos_c[:, None]
+        mask = key_pos[None, None, :] <= pos_c[:, :, None]         # (B,C,S)
         if cfg.attention == "swa":
-            mask &= key_pos[None, :] > (pos_c[:, None] - cfg.swa_window)
+            mask &= key_pos[None, None, :] > (pos_c[:, :, None] - cfg.swa_window)
         from repro.core.reference import _gqa_out, _gqa_scores, _safe_softmax
-        probs, _ = _safe_softmax(_gqa_scores(q, k_view), mask[:, None, :])
-        o = _gqa_out(probs, v_view).astype(q.dtype)
-    o = jnp.where(q_mask[:, None, None], o.reshape(c, cfg.n_heads, -1), 0)
-    return _out_proj(p, o[None], cfg)[0], layer_cache
+        def one(q1, kv1, vv1, m1):
+            probs, _ = _safe_softmax(_gqa_scores(q1, kv1), m1[:, None, :])
+            return _gqa_out(probs, vv1).astype(q1.dtype)
+        o = jax.vmap(one)(q, k_view, v_view, mask)
+    o = jnp.where(q_mask[:, :, None, None],
+                  o.reshape(b, c, cfg.n_heads, -1), 0)
+    return _out_proj(p, o, cfg), layer_cache
+
+
+def paged_attention_prefill_chunk(p, x_c, layer_cache, tables, t0, length, cfg):
+    """Single-slot chunked prefill (compat wrapper over the batched path).
+
+    x_c: (C, D); tables: {"page_table": (max_pages,), "cmp_table":
+    (max_cmp_pages,)}; t0/length: scalars.
+    """
+    o, layer_cache = paged_attention_prefill_chunks(
+        p, x_c[None], layer_cache,
+        {k: v[None] for k, v in tables.items()},
+        jnp.asarray(t0)[None], jnp.asarray(length)[None], cfg)
+    return o[0], layer_cache

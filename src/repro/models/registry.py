@@ -13,7 +13,6 @@ are stubs — precomputed frame/patch embeddings per the assignment.
 """
 from __future__ import annotations
 
-import dataclasses
 from types import SimpleNamespace
 
 import jax

@@ -10,8 +10,6 @@ is never materialised (vocab is TP-sharded).
 """
 from __future__ import annotations
 
-import functools
-
 import jax
 import jax.numpy as jnp
 
@@ -338,26 +336,27 @@ def lm_paged_decode_step(params, cache, tokens, pos, tables, cfg):
     return _head(params, x[:, None], cfg)[:, 0], cache
 
 
-def lm_paged_prefill_chunk(params, cache, tokens_c, t0, length, tables, cfg):
-    """Prefill one chunk of ONE slot into paged storage.
+def lm_paged_prefill_chunks(params, cache, tokens_c, t0, length, tables, cfg):
+    """Prefill one chunk for a BATCH of slots into paged storage.
 
-    tokens_c: (C,) int32 at absolute positions [t0, t0+C) (tail beyond
-    ``length`` is padding); tables: this slot's {"page_table", "cmp_table"}
-    rows.  Returns (logits (C, V), cache) — the engine reads the logit at
-    the prompt's last position from the final chunk.
+    tokens_c: (B, C) int32, slot b's tokens at absolute positions
+    [t0_b, t0_b + C) (tail beyond ``length_b`` is padding); t0/length: (B,);
+    tables: {"page_table": (B, max_pages), "cmp_table": (B, max_cmp_pages)}.
+    Returns (logits (B, C, V), cache) — the engine reads each slot's logit
+    at its prompt's last position from the chunk that covers it.  Padding
+    slots (length 0, all-dump-page tables) are inert.
     """
-    x = params["embed"][tokens_c]                          # (C, D)
+    x = params["embed"][tokens_c]                          # (B, C, D)
 
     def body(x, args):
         p_l, c_l = args
         h = rms_norm(x, p_l["ln1"], cfg.norm_eps)
-        h, c_l = attn.paged_attention_prefill_chunk(
+        h, c_l = attn.paged_attention_prefill_chunks(
             p_l["attn"], h, c_l, tables, t0, length, cfg)
         x = x + h
         h = rms_norm(x, p_l["ln2"], cfg.norm_eps)
         if cfg.moe is not None:
-            h2, _ = moe.apply_moe(p_l["moe"], h[None], cfg)
-            h = h2[0]
+            h, _ = moe.apply_moe(p_l["moe"], h, cfg)
         else:
             h = apply_mlp(p_l["mlp"], h, cfg.mlp)
         return x + h, c_l
@@ -365,7 +364,20 @@ def lm_paged_prefill_chunk(params, cache, tokens_c, t0, length, tables, cfg):
     x, cl = jax.lax.scan(body, x, (params["layers"], cache["layers"]))
     cache = dict(cache, layers=cl)
     x = rms_norm(x, params["final_norm"], cfg.norm_eps)
-    return _head(params, x[None], cfg)[0], cache
+    return _head(params, x, cfg), cache
+
+
+def lm_paged_prefill_chunk(params, cache, tokens_c, t0, length, tables, cfg):
+    """Single-slot chunked prefill (compat wrapper over the batched path).
+
+    tokens_c: (C,) int32; t0/length: scalars; tables: this slot's
+    {"page_table", "cmp_table"} rows.  Returns (logits (C, V), cache).
+    """
+    logits, cache = lm_paged_prefill_chunks(
+        params, cache, tokens_c[None], jnp.asarray(t0)[None],
+        jnp.asarray(length)[None],
+        {k: v[None] for k, v in tables.items()}, cfg)
+    return logits[0], cache
 
 
 def _decode_attn_block(p, x_t, cache, pos, cfg):

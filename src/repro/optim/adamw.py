@@ -7,7 +7,6 @@ is 12 bytes/param ÷ (data × model shards).
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, Optional
 
 import jax
 import jax.numpy as jnp

@@ -127,6 +127,20 @@ class PagedNSACache:
         return {"page_table": dev["page_table"][slot],
                 "cmp_table": dev["cmp_table"][slot]}
 
+    def slot_tables_batch(self, slots, batch_size: int | None = None) -> dict:
+        """Batched {"page_table": (B, max_pages), "cmp_table": …} for the
+        given slots, padded to ``batch_size`` with all-dump-page rows (inert
+        slots) — the fixed-shape operand of the batched prefill jit."""
+        bsz = batch_size if batch_size is not None else len(slots)
+        if len(slots) > bsz:
+            raise ValueError(f"{len(slots)} slots exceed batch size {bsz}")
+        pt = np.zeros((bsz, self.max_pages), np.int32)
+        ct = np.zeros((bsz, self.max_cmp_pages), np.int32)
+        for i, s in enumerate(slots):
+            pt[i] = self.tables[s].as_row()
+            ct[i] = self.cmp_tables[s].as_row()
+        return {"page_table": jnp.asarray(pt), "cmp_table": jnp.asarray(ct)}
+
     def utilization(self) -> dict:
         return {"raw": self.pool.utilization(),
                 "cmp": self.cmp_pool.utilization()}
@@ -137,13 +151,20 @@ class PagedNSACache:
         the dense cache stores directly.  Test/debug path: materialises the
         whole slot, whereas decode reads only the pages the NSA branches
         touch."""
-        t = self.slot_tables(slot)
+        return {k: v[0] for k, v in self.gather_views([slot], layer).items()}
+
+    def gather_views(self, slots, layer: int = 0) -> dict:
+        """Batched ``gather_view``: dense (B, max_len, h_k, d) K/V (+ cmp)
+        views for the given slots — the (B, …) shape the batched decode /
+        parity tests consume."""
+        t = self.slot_tables_batch(list(slots))
         lc = jax.tree.map(lambda a: a[layer], self.data["layers"])
         rows = jnp.arange(self.max_pages * self.page_size)
-        out = {"k": gather_rows(lc["k_pages"], t["page_table"], rows),
-               "v": gather_rows(lc["v_pages"], t["page_table"], rows)}
+        gk = jax.vmap(gather_rows, in_axes=(None, 0, None))
+        out = {"k": gk(lc["k_pages"], t["page_table"], rows),
+               "v": gk(lc["v_pages"], t["page_table"], rows)}
         if "cmp_k_pages" in lc:
             crows = jnp.arange(self.max_cmp_pages * self.page_size)
-            out["cmp_k"] = gather_rows(lc["cmp_k_pages"], t["cmp_table"], crows)
-            out["cmp_v"] = gather_rows(lc["cmp_v_pages"], t["cmp_table"], crows)
+            out["cmp_k"] = gk(lc["cmp_k_pages"], t["cmp_table"], crows)
+            out["cmp_v"] = gk(lc["cmp_v_pages"], t["cmp_table"], crows)
         return out

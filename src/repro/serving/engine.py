@@ -1,10 +1,13 @@
 """Continuous-batching serving engine on the paged NSA KV-cache.
 
 Replaces the old fixed-batch loop in ``launch/serve.py``: prompts of any
-length are admitted as slots and pages free up, prefill streams each prompt
-through a fixed-shape chunked jit, and every engine tick decodes one token
-for all active slots at their own absolute positions (a (B,) position
-vector, not a shared scalar).
+length are admitted as slots and pages free up, prefill streams ALL newly
+admitted prompts together through one fixed-shape batched chunk jit, and
+every engine tick decodes one token for all active slots at their own
+absolute positions (a (B,) position vector, not a shared scalar) in ONE
+batched dispatch — the Pallas paged-decode kernel
+(``kernels/paged_decode.py``) by default, which folds the slot batch into
+the MXU M dimension and reads KV through the page table at page granularity.
 
 The NSA decode tick reads only the pages its branches touch — compressed
 rows, the top-T selected pages and the sliding window — so a tick is
@@ -12,6 +15,7 @@ O(N/stride + T·B_K + W) per slot regardless of context depth.
 """
 from __future__ import annotations
 
+import dataclasses
 import time
 
 import numpy as np
@@ -31,11 +35,15 @@ class Engine:
 
     def __init__(self, cfg, n_slots: int = 4, max_len: int = 1024, *,
                  num_pages: int | None = None, prefill_chunk: int | None = None,
-                 params=None, seed: int = 0):
+                 params=None, seed: int = 0, use_kernel: bool | None = None,
+                 admit_limit: int | None = None):
         if cfg.family not in SUPPORTED_FAMILIES:
             raise NotImplementedError(
                 f"paged serving supports families {SUPPORTED_FAMILIES}, got "
                 f"'{cfg.family}' (ssm/hybrid/encdec state is not paged KV)")
+        if use_kernel is not None:   # override cfg.nsa.paged_kernel
+            cfg = dataclasses.replace(
+                cfg, nsa=dataclasses.replace(cfg.nsa, paged_kernel=use_kernel))
         self.cfg = cfg
         self.model = build(cfg)
         self.params = (params if params is not None
@@ -48,6 +56,10 @@ class Engine:
                                  self.cache.max_pages * p)
         self.scheduler = Scheduler(self.cache, self.prefill_chunk)
         self.n_slots = n_slots
+        # caps one step's admission batch (everything admitted together is
+        # prefilled together, so this bounds how many short prompts a long
+        # co-admitted one can stall); None = fill all free slots
+        self.admit_limit = admit_limit
 
         # cfg is closed over (static); cache buffers are donated per call
         self._decode = jax.jit(
@@ -57,8 +69,8 @@ class Engine:
             donate_argnums=(1,))
         self._prefill = jax.jit(
             lambda params, data, toks, t0, length, tables:
-                transformer.lm_paged_prefill_chunk(params, data, toks, t0,
-                                                   length, tables, cfg),
+                transformer.lm_paged_prefill_chunks(params, data, toks, t0,
+                                                    length, tables, cfg),
             donate_argnums=(1,))
         self._last_tokens = np.zeros((n_slots,), np.int32)
         self.stats = {"decoded_tokens": 0, "decode_ticks": 0, "decode_s": 0.0,
@@ -72,28 +84,52 @@ class Engine:
             Request(prompt=np.asarray(prompt), max_new=max_new, eos_id=eos_id))
 
     # ------------------------------------------------------------ prefill
-    def _prefill_request(self, req: Request) -> None:
-        """Stream the prompt through the fixed-shape chunk jit into pages."""
-        t0 = time.time()
+    def _prefill_requests(self, reqs: list[Request]) -> None:
+        """Stream ALL newly admitted prompts together through the fixed-shape
+        batched chunk jit: one dispatch per chunk step for the whole
+        admission batch (padded to ``n_slots`` rows so the jit never
+        recompiles).  Slots whose (shorter) prompt is already fully written
+        ride along inertly — their writes land on the dump page."""
+        if not reqs:
+            return
+        t_start = time.time()
         c = self.prefill_chunk
-        length = len(req.prompt)
-        padded = -(-length // c) * c
-        toks = np.zeros((padded,), np.int32)
-        toks[:length] = req.prompt
-        tables = self.cache.slot_tables(req.slot)
-        logits = None
-        for start in range(0, padded, c):
+        bsz = self.n_slots
+        lens = [len(r.prompt) for r in reqs]
+        padded = [-(-n // c) * c for n in lens]
+        max_chunks = max(p // c for p in padded)
+        toks = np.zeros((bsz, max_chunks * c), np.int32)
+        length = np.zeros((bsz,), np.int32)
+        for i, r in enumerate(reqs):
+            toks[i, :lens[i]] = r.prompt
+            length[i] = lens[i]
+        tables = self.cache.slot_tables_batch([r.slot for r in reqs],
+                                              batch_size=bsz)
+        length_j = jnp.asarray(length)
+        last_logits = [None] * len(reqs)
+        for kc in range(max_chunks):
+            start = kc * c
             logits, self.cache.data = self._prefill(
-                self.params, self.cache.data, jnp.asarray(toks[start:start + c]),
-                jnp.int32(start), jnp.int32(length), tables)
-        self.cache.lengths[req.slot] = length
-        last = logits[(length - 1) - (padded - c), :self.cfg.vocab]
-        tok = int(jnp.argmax(last))
-        req.out.append(tok)
-        req.first_token_t = time.time()
-        self._last_tokens[req.slot] = tok
-        self.stats["prefill_tokens"] += length
-        self.stats["prefill_s"] += time.time() - t0
+                self.params, self.cache.data,
+                jnp.asarray(toks[:, start:start + c]),
+                jnp.full((bsz,), start, jnp.int32), length_j, tables)
+            for i in range(len(reqs)):
+                if kc == padded[i] // c - 1:     # chunk with the last token
+                    last_logits[i] = logits[i, (lens[i] - 1) - start,
+                                            :self.cfg.vocab]
+        t_first = time.time()
+        for i, r in enumerate(reqs):
+            self.cache.lengths[r.slot] = lens[i]
+            tok = int(jnp.argmax(last_logits[i]))
+            r.out.append(tok)
+            r.first_token_t = t_first
+            self._last_tokens[r.slot] = tok
+            self.stats["prefill_tokens"] += lens[i]
+        self.stats["prefill_s"] += time.time() - t_start
+
+    def _prefill_request(self, req: Request) -> None:
+        """Single-request prefill (compat wrapper over the batched path)."""
+        self._prefill_requests([req])
 
     # -------------------------------------------------------------- ticks
     def _finish_ready(self) -> list[Request]:
@@ -126,9 +162,8 @@ class Engine:
 
     def step(self) -> dict:
         """One engine iteration: admit + prefill, decode, recycle slots."""
-        admitted = self.scheduler.admit()
-        for req in admitted:
-            self._prefill_request(req)
+        admitted = self.scheduler.admit(self.admit_limit)
+        self._prefill_requests(admitted)
         util = self.cache.utilization()
         self.stats["peak_page_util"] = max(self.stats["peak_page_util"],
                                            util["raw"])

@@ -89,11 +89,16 @@ class Scheduler:
         return max(padded, len(req.prompt) + req.max_new)
 
     # ---------------------------------------------------------- admission
-    def admit(self) -> list[Request]:
+    def admit(self, limit: int | None = None) -> list[Request]:
         """Move queued requests into free slots while pages allow (FIFO —
-        no head-of-line bypass, so admission latency stays predictable)."""
+        no head-of-line bypass, so admission latency stays predictable).
+
+        Everything admitted on one call is prefilled TOGETHER by the
+        engine's batched chunk jit, so the returned list is the admission
+        batch; ``limit`` caps it (e.g. to bound the chunk count a single
+        long prompt imposes on co-admitted short ones)."""
         admitted = []
-        while self.queue:
+        while self.queue and (limit is None or len(admitted) < limit):
             try:
                 slot = self.slots.index(None)
             except ValueError:

@@ -3,9 +3,7 @@ a tiny LM trains with NSA attention and the loss decreases; the FSA-kernel
 implementation follows the same trajectory as the sparse reference path."""
 import dataclasses
 
-import jax
 import numpy as np
-import pytest
 
 from repro.configs import get_config, reduced
 from repro.launch.mesh import make_mesh

@@ -1,5 +1,7 @@
 """Paged-KV serving: pool invariants, paged-vs-dense equivalence,
-decode-vs-prefill parity, mixed-length continuous batching."""
+decode-vs-prefill parity, mixed-length continuous batching, and the Pallas
+paged-decode kernel (kernel-vs-gather-reference equivalence, page-table
+permutation invariance, batched-vs-sequential parity)."""
 import numpy as np
 import pytest
 
@@ -7,6 +9,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs import get_config, reduced
+from repro.core.nsa_config import NSAConfig
+from repro.kernels import ops
 from repro.models import build
 from repro.serving import Engine, PagePool, PagedNSACache, Request
 from repro.serving.scheduler import Scheduler
@@ -68,6 +72,18 @@ def test_cache_slot_lifecycle():
     assert int(table[1, 0]) == 0        # idle slot routes to the dump page
     cache.free_slot(0)
     assert cache.pool.used == 0 and cache.cmp_pool.used == 0
+
+
+def test_scheduler_admit_limit():
+    """admit(limit) caps the admission batch even with free slots/pages."""
+    cfg = _cfg()
+    cache = PagedNSACache(cfg, n_slots=3, max_len=MAX_LEN)
+    sched = Scheduler(cache, prefill_chunk=CHUNK)
+    for n in (8, 9, 10):
+        sched.submit(Request(prompt=np.arange(1, n), max_new=4))
+    assert len(sched.admit(limit=2)) == 2
+    assert sched.pending == 1
+    assert len(sched.admit()) == 1          # no limit: fill remaining slot
 
 
 def test_scheduler_rejects_oversized_request():
@@ -154,6 +170,116 @@ def test_decode_scalar_pos_backcompat():
                                           jnp.asarray([16, 16]))
     np.testing.assert_allclose(np.asarray(l_scalar), np.asarray(l_vec),
                                rtol=1e-6, atol=1e-6)
+
+
+# ------------------------------------------------- paged decode kernel
+def _rand_paged_state(seed=0, slots=3, h_k=2, g=2, d=16, max_pages=6,
+                      n_pages=32):
+    """Random paged decode operands with per-slot page tables mapping onto a
+    shuffled set of physical (non-dump) pages."""
+    cfg = NSAConfig(block_size=16, num_selected=4, cmp_block_size=8,
+                    cmp_stride=4, window_size=32, q_block_size=16)
+    p = cfg.block_size
+    h = h_k * g
+    ks = jax.random.split(jax.random.PRNGKey(seed), 7)
+    state = {
+        "cfg": cfg,
+        "q": jax.random.normal(ks[0], (slots, h, d)),
+        "gates": jax.nn.softmax(jax.random.normal(ks[1], (slots, h, 3)), -1),
+        "k_pages": jax.random.normal(ks[2], (n_pages, p, h_k, d)),
+        "v_pages": jax.random.normal(ks[3], (n_pages, p, h_k, d)),
+    }
+    perm = np.random.default_rng(seed).permutation(np.arange(1, n_pages))
+    state["tables"] = jnp.asarray(
+        perm[:slots * max_pages].reshape(slots, max_pages), jnp.int32)
+    n_cmp = cfg.num_cmp_blocks(max_pages * p)
+    state["cmp_k"] = jax.random.normal(ks[4], (slots, n_cmp, h_k, d))
+    state["cmp_v"] = jax.random.normal(ks[5], (slots, n_cmp, h_k, d))
+    state["pos"] = jnp.asarray(
+        np.random.default_rng(seed + 1).integers(0, max_pages * p,
+                                                 size=(slots,)), jnp.int32)
+    return state
+
+
+def _run_paged(st, *, use_kernel, tables=None, k_pages=None, v_pages=None,
+               block_s=None):
+    return ops.paged_decode_attention_batched(
+        st["gates"], st["q"],
+        st["k_pages"] if k_pages is None else k_pages,
+        st["v_pages"] if v_pages is None else v_pages,
+        st["tables"] if tables is None else tables,
+        st["cmp_k"], st["cmp_v"], st["pos"], st["cfg"],
+        use_kernel=use_kernel, block_s=block_s)
+
+
+def test_paged_kernel_matches_gather_reference():
+    """Interpret-mode Pallas paged-decode == gather-through-page-table
+    reference, at fp32 tolerance, across uneven slot positions."""
+    st = _rand_paged_state()
+    ref = _run_paged(st, use_kernel=False)
+    ker = _run_paged(st, use_kernel=True)
+    np.testing.assert_allclose(np.asarray(ref), np.asarray(ker),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_page_table_permutation_invariance():
+    """Physically shuffling pages (and remapping the tables accordingly)
+    must not change a single logit: the kernel addresses KV only through
+    the page table."""
+    st = _rand_paged_state(seed=3)
+    n_pages = st["k_pages"].shape[0]
+    base = _run_paged(st, use_kernel=True)
+
+    rng = np.random.default_rng(7)
+    perm = np.concatenate([[0], 1 + rng.permutation(n_pages - 1)])  # keep dump
+    perm_j = jnp.asarray(perm)
+    # physical page p moves to slot perm[p]; tables follow
+    k_shuf = jnp.zeros_like(st["k_pages"]).at[perm_j].set(st["k_pages"])
+    v_shuf = jnp.zeros_like(st["v_pages"]).at[perm_j].set(st["v_pages"])
+    tables_shuf = perm_j[st["tables"]].astype(jnp.int32)
+    shuf = _run_paged(st, use_kernel=True, tables=tables_shuf,
+                      k_pages=k_shuf, v_pages=v_shuf)
+    np.testing.assert_allclose(np.asarray(base), np.asarray(shuf),
+                               rtol=1e-6, atol=1e-6)
+
+
+def test_batched_vs_sequential_decode_parity():
+    """One batched multi-slot kernel call == per-slot single-slot calls of
+    the public API (both on the kernel path), including when the slot count
+    does not divide the fold block (slot-padding path)."""
+    st = _rand_paged_state(seed=5)                    # 3 slots
+    batched = _run_paged(st, use_kernel=True)
+    padded = _run_paged(st, use_kernel=True, block_s=2)   # 3 % 2 != 0
+    np.testing.assert_allclose(np.asarray(batched), np.asarray(padded),
+                               rtol=1e-5, atol=1e-5)
+    for b in range(st["q"].shape[0]):
+        single = ops.paged_decode_attention(
+            st["gates"][b], st["q"][b], st["k_pages"], st["v_pages"],
+            st["tables"][b], st["cmp_k"][b], st["cmp_v"][b], st["pos"][b],
+            st["cfg"], use_kernel=True)
+        np.testing.assert_allclose(np.asarray(batched[b]), np.asarray(single),
+                                   rtol=1e-5, atol=1e-5, err_msg=f"slot {b}")
+
+
+def test_engine_decode_is_one_batched_dispatch(monkeypatch):
+    """The engine's decode tick must trace exactly ONE batched paged-decode
+    dispatch (the lax.scan over layers traces its body once), not one per
+    slot."""
+    calls = []
+    real = ops.paged_decode_attention_batched
+
+    def counting(*args, **kwargs):
+        calls.append(args[1].shape)          # q: (B, h, d)
+        return real(*args, **kwargs)
+
+    monkeypatch.setattr(ops, "paged_decode_attention_batched", counting)
+    cfg = _cfg()
+    eng = Engine(cfg, n_slots=2, max_len=MAX_LEN, prefill_chunk=CHUNK)
+    eng.submit(np.arange(1, 10) % cfg.vocab, max_new=2)
+    eng.submit(np.arange(2, 13) % cfg.vocab, max_new=2)
+    eng.run()
+    assert len(calls) == 1, f"expected 1 traced dispatch, saw {len(calls)}"
+    assert calls[0][0] == 2                  # the full slot batch at once
 
 
 # -------------------------------------------------- continuous batching

@@ -1,7 +1,5 @@
 """Optimizer / checkpoint / data / runtime / mamba / HLO-analysis tests."""
 import json
-import pathlib
-import shutil
 
 import jax
 import jax.numpy as jnp
@@ -153,7 +151,6 @@ def test_ssd_chunked_matches_naive_recurrence():
 
 def test_mamba_decode_continues_forward():
     """Prefill state + one decode step == forward over S+1 tokens."""
-    import dataclasses
     from repro.configs.base import ModelConfig, SSMConfig
     from repro.models.mamba2 import (init_mamba, mamba_decode_step,
                                      mamba_forward)
