@@ -40,7 +40,7 @@ def main():
     k = jax.random.normal(ks[1], (n, h_k, d))
     v = jax.random.normal(ks[2], (n, h_k, d))
     cfg = NSAConfig(block_size=b_k, num_selected=t_sel, q_block_size=32,
-                    cmp_block_size=8, cmp_stride=4, kernel="fsa")
+                    cmp_block_size=8, cmp_stride=4)
     scores = jax.random.uniform(ks[3], (n, h_k, n // b_k))
     idx, valid = select_blocks(scores, jnp.arange(n), cfg, n)
 

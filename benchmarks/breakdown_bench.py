@@ -12,6 +12,7 @@ import time
 import jax
 import jax.numpy as jnp
 
+from repro import attention as uattn
 from repro.core import (NSAConfig, apply_gates, compressed_and_selection,
                         init_nsa_params)
 from repro.core import sparse
@@ -45,11 +46,10 @@ def fwd_bwd_breakdown():
     _, idx, valid = compressed_and_selection(p, q, k, v, cfg, q_chunk=128)
     rows = []
     for kern in ("fsa", "nsa"):
-        c = NSAConfig(**{**cfg.__dict__, "kernel": kern})
-        f = jax.jit(lambda q, k, v, c=c: ops.selected_attention(
-            q, k, v, idx, valid, c).sum())
-        g_ = jax.jit(jax.grad(lambda q, k, v, c=c: ops.selected_attention(
-            q, k, v, idx, valid, c).sum(), argnums=(0, 1, 2)))
+        f = jax.jit(lambda q, k, v, kn=kern: uattn.selected_attention(
+            q, k, v, idx, valid, cfg, kernel=kn).sum())
+        g_ = jax.jit(jax.grad(lambda q, k, v, kn=kern: uattn.selected_attention(
+            q, k, v, idx, valid, cfg, kernel=kn).sum(), argnums=(0, 1, 2)))
         rows.append((f"selected/{kern}", _t(f, q, k, v), _t(g_, q, k, v)))
     f = jax.jit(lambda q, k, v: ops.full_attention(q, k, v, cfg).sum())
     g_ = jax.jit(jax.grad(lambda q, k, v: ops.full_attention(

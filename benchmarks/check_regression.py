@@ -1,0 +1,161 @@
+"""Perf-trajectory regression gate.
+
+Diffs a freshly produced ``BENCH_kernel.json`` / ``BENCH_serve.json``
+(written by ``kernel_bench.py --json-out`` / ``serve_bench.py --json-out``
+through the shared ``benchmarks/results.py`` envelope) against the committed
+baselines in ``benchmarks/baselines/`` and exits non-zero when any latency
+metric regressed by more than ``--threshold`` (default 20%).
+
+Per-backend kernel latencies are compared key-by-key (``prefill/fsa``,
+``paged_decode/paged_kernel``, ...), so a regression in ONE backend is
+named, not averaged away.  Metrics below ``--floor-us`` are skipped —
+micro-second-scale interpret-mode numbers on shared CI runners are noise.
+Throughput metrics (tok/s) regress when they *drop* by the threshold.
+
+Usage (the CI bench-smoke job runs exactly this):
+
+  python benchmarks/check_regression.py \
+      --current BENCH_kernel.json --baseline benchmarks/baselines/BENCH_kernel.json
+  python benchmarks/check_regression.py \
+      --current BENCH_serve.json --baseline benchmarks/baselines/BENCH_serve.json
+
+``--update-baseline`` rewrites the baseline from the current run (commit the
+result to move the gate).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import shutil
+import sys
+
+
+def _kernel_latencies(doc: dict) -> dict:
+    """{metric: us} from a BENCH_kernel.json document."""
+    return {f"cpu_interpret_us/{k}": float(v)
+            for k, v in doc["results"].get("cpu_interpret_us", {}).items()}
+
+
+def _serve_metrics(doc: dict) -> tuple:
+    """({latency metric: us}, {throughput metric: value}).
+
+    Latencies are normalized to MICROSECONDS so the shared ``--floor-us``
+    noise floor means the same thing for kernel and serve documents.
+    """
+    r = doc["results"]
+    scale = {"decode_ms_tick": 1e3, "mean_latency_s": 1e6, "mean_ttft_s": 1e6}
+    lat = {k: float(r[k]) * s for k, s in scale.items() if r.get(k)}
+    thr = {k: float(r[k]) for k in ("decode_tok_s", "prefill_tok_s")
+           if r.get(k)}
+    return lat, thr
+
+
+def extract(doc: dict) -> tuple:
+    if doc.get("bench") == "kernel_bench":
+        return _kernel_latencies(doc), {}
+    if doc.get("bench") == "serve_bench":
+        return _serve_metrics(doc)
+    raise SystemExit(f"unknown bench document: {doc.get('bench')!r}")
+
+
+def compare(cur: dict, base: dict, *, threshold: float,
+            floor_us: float) -> tuple:
+    """(regression records, baseline metrics missing from the current run).
+
+    A metric that silently disappears (backend unregistered, bench filter
+    typo) is exactly the blind spot a gate must not have — missing keys are
+    reported and fail the gate unless ``--allow-missing``."""
+    cur_lat, cur_thr = extract(cur)
+    base_lat, base_thr = extract(base)
+    missing = sorted((set(base_lat) - set(cur_lat))
+                     | (set(base_thr) - set(cur_thr)))
+    bad = []
+    for key in sorted(set(cur_lat) & set(base_lat)):
+        c, b = cur_lat[key], base_lat[key]
+        # noise exemption only while BOTH sides are micro-scale: a baseline
+        # below the floor must not grant a backend a permanent free pass
+        if b < floor_us and c < floor_us:
+            continue
+        if c > b * (1 + threshold):
+            bad.append((key, b, c, c / b - 1, "latency"))
+    for key in sorted(set(cur_thr) & set(base_thr)):
+        c, b = cur_thr[key], base_thr[key]
+        if b <= 0:
+            continue
+        if c < b * (1 - threshold):
+            bad.append((key, b, c, 1 - c / b, "throughput"))
+    return bad, missing
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--current", required=True,
+                    help="BENCH_*.json produced by this run")
+    ap.add_argument("--baseline", required=True,
+                    help="committed baseline BENCH_*.json")
+    ap.add_argument("--threshold", type=float, default=0.20,
+                    help="max tolerated relative regression (0.20 = 20%%)")
+    ap.add_argument("--floor-us", type=float, default=200.0,
+                    help="skip latency metrics below this (noise floor)")
+    ap.add_argument("--allow-missing", action="store_true",
+                    help="do not fail when baseline metrics are absent from "
+                         "the current run (e.g. a backend was retired)")
+    ap.add_argument("--update-baseline", action="store_true",
+                    help="overwrite the baseline with the current run")
+    args = ap.parse_args(argv)
+
+    cur_path = pathlib.Path(args.current)
+    base_path = pathlib.Path(args.baseline)
+    if args.update_baseline:
+        base_path.parent.mkdir(parents=True, exist_ok=True)
+        shutil.copy(cur_path, base_path)
+        print(f"[check_regression] baseline updated: {base_path}")
+        return 0
+    if not base_path.exists():
+        print(f"[check_regression] no baseline at {base_path}; pass "
+              f"--update-baseline to seed it (not failing)")
+        return 0
+    cur = json.loads(cur_path.read_text())
+    base = json.loads(base_path.read_text())
+    if cur.get("bench") != base.get("bench"):
+        raise SystemExit("current and baseline are different benches: "
+                         f"{cur.get('bench')!r} vs {base.get('bench')!r}")
+    env_c, env_b = cur.get("environment", {}), base.get("environment", {})
+    if env_c.get("jax") != env_b.get("jax"):
+        print(f"[check_regression] jax {env_b.get('jax')} -> "
+              f"{env_c.get('jax')}: cross-version point, comparing anyway")
+
+    bad, missing = compare(cur, base, threshold=args.threshold,
+                           floor_us=args.floor_us)
+    cur_lat, cur_thr = extract(cur)
+    base_lat, base_thr = extract(base)
+    n_shared = len(set(cur_lat) & set(base_lat)) + len(set(cur_thr)
+                                                      & set(base_thr))
+    print(f"[check_regression] {base_path.name}: {n_shared} shared metrics "
+          f"at threshold {args.threshold:.0%} "
+          f"(latency floor {args.floor_us:.0f}us)")
+    rc = 0
+    if n_shared == 0:
+        print("[check_regression] FAIL: nothing to compare — the current "
+              "run shares no metrics with the baseline")
+        rc = 1
+    for key in missing:
+        print(f"[check_regression] MISSING from current run: {key}"
+              + (" (allowed)" if args.allow_missing else ""))
+    if missing and not args.allow_missing:
+        print("[check_regression] FAIL: baseline metrics vanished — pass "
+              "--allow-missing or --update-baseline if intentional")
+        rc = 1
+    for key, b, c, rel, kind in bad:
+        print(f"[check_regression] REGRESSION {kind} {key}: "
+              f"{b:.1f} -> {c:.1f} (+{rel:.0%})")
+    if bad:
+        rc = 1
+    if rc == 0:
+        print("[check_regression] OK — no regression beyond threshold")
+    return rc
+
+
+if __name__ == "__main__":
+    sys.exit(main())

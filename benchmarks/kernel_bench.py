@@ -3,14 +3,18 @@
 This container has no TPU, so two complementary measurements are reported:
   1. CPU wall time of the *semantic* implementations (interpret-mode Pallas
      kernels at small shapes) — verifies the machinery end to end and gives
-     directional per-kernel cost;
+     directional per-backend cost.  ``--backend all`` (the default) sweeps
+     every backend registered in ``repro.attention`` that is capable of the
+     benchmarked mode, driven from the registry — new backends show up here
+     with zero bench changes;
   2. the analytic latency projection at the paper's shapes on TPU v5e
      (197 TFLOP/s bf16, 819 GB/s HBM): t = max(flops/peak, bytes/bw) from the
      §3.3 model — the roofline-derived Fig. 4 twin, per (g, B_K, T, N).
 
 ``--json-out PATH`` writes the rows as a BENCH_kernel.json trajectory point
-(shared writer in ``benchmarks/results.py``); ``--tiny`` shrinks shapes for
-the CI bench-smoke job.
+(shared writer in ``benchmarks/results.py``; per-backend keys, so
+``benchmarks/check_regression.py`` can diff them against a committed
+baseline); ``--tiny`` shrinks shapes for the CI bench-smoke job.
 """
 from __future__ import annotations
 
@@ -26,67 +30,126 @@ try:
 except ImportError:      # script-style run: benchmarks/ itself is sys.path[0]
     import analytic_model as am
     from results import write_results
-from repro.core import NSAConfig
-from repro.core.selection import select_blocks
-from repro.kernels import ops
+from repro.attention import NSAConfig, list_backends, nsa_attention
+from repro.core import apply_gates, init_nsa_params
 
 V5E_FLOPS = 197e12
 V5E_BW = 819e9
 
 
-def time_call(fn, *args, reps=3):
+def time_call(fn, *args, reps=5):
+    """Min-of-reps latency in us — min is far stabler than mean against
+    scheduler spikes on shared runners, which matters because
+    check_regression.py gates on these numbers at a 20% threshold."""
     fn(*args)  # compile/warm
-    t0 = time.perf_counter()
+    best = float("inf")
     for _ in range(reps):
+        t0 = time.perf_counter()
         jax.block_until_ready(fn(*args))
-    return (time.perf_counter() - t0) / reps * 1e6  # us
+        best = min(best, time.perf_counter() - t0)
+    return best * 1e6  # us
 
 
-def cpu_kernel_times(n=256, g=2, h_k=2, d=32, b_k=16, t_sel=4):
-    ks = jax.random.split(jax.random.PRNGKey(0), 4)
+def _nsa_state(n, g, h_k, d, b_k, t_sel):
+    cfg = NSAConfig(block_size=b_k, num_selected=t_sel, q_block_size=32,
+                    cmp_block_size=8, cmp_stride=4, window_size=2 * b_k,
+                    min_seq_for_sparse=1)
     h = g * h_k
-    q = jax.random.normal(ks[0], (n, h, d))
-    k = jax.random.normal(ks[1], (n, h_k, d))
-    v = jax.random.normal(ks[2], (n, h_k, d))
-    scores = jax.random.uniform(ks[3], (n, h_k, n // b_k))
-    base = NSAConfig(block_size=b_k, num_selected=t_sel, q_block_size=32,
-                     cmp_block_size=8, cmp_stride=4)
-    idx, valid = select_blocks(scores, jnp.arange(n), base, n)
-    rows = []
-    for kern in ("fsa", "fsa_faithful", "nsa"):
-        cfg = NSAConfig(**{**base.__dict__, "kernel": kern})
-        fn = jax.jit(lambda q, k, v, c=cfg: ops.selected_attention(
-            q, k, v, idx, valid, c))
-        rows.append((f"selected/{kern}", time_call(fn, q, k, v)))
-    fn = jax.jit(lambda q, k, v: ops.full_attention(q, k, v, base))
-    rows.append(("full/flash", time_call(fn, q, k, v)))
-    rows.append(("paged_decode/kernel",
-                 paged_decode_time(b_k=b_k, t_sel=t_sel, h_k=h_k, g=g, d=d)))
-    return rows
+    ks = jax.random.split(jax.random.PRNGKey(0), 5)
+    p = init_nsa_params(ks[0], 64, h, d, cfg)
+    gates = apply_gates(p, jax.random.normal(ks[1], (n, 64)))
+    q = jax.random.normal(ks[2], (n, h, d))
+    k = jax.random.normal(ks[3], (n, h_k, d))
+    v = jax.random.normal(ks[4], (n, h_k, d))
+    return cfg, p, gates, q, k, v
 
 
-def paged_decode_time(*, b_k=16, t_sel=4, h_k=2, g=2, d=32, slots=4,
-                      max_pages=8):
-    """Interpret-mode latency of one batched paged-decode dispatch."""
+def _paged_state(b_k, t_sel, h_k, g, d, slots, max_pages):
     cfg = NSAConfig(block_size=b_k, num_selected=t_sel, cmp_block_size=8,
                     cmp_stride=4, window_size=2 * b_k, q_block_size=32)
     h = h_k * g
     num_pages = slots * max_pages + 1
     n_cmp = cfg.num_cmp_blocks(max_pages * b_k)
     ks = jax.random.split(jax.random.PRNGKey(1), 6)
-    q = jax.random.normal(ks[0], (slots, h, d))
-    gates = jax.nn.softmax(jax.random.normal(ks[1], (slots, h, 3)), -1)
-    k_pages = jax.random.normal(ks[2], (num_pages, b_k, h_k, d))
-    v_pages = jax.random.normal(ks[3], (num_pages, b_k, h_k, d))
-    cmp_k = jax.random.normal(ks[4], (slots, n_cmp, h_k, d))
-    cmp_v = jax.random.normal(ks[5], (slots, n_cmp, h_k, d))
-    tables = (1 + jnp.arange(slots * max_pages, dtype=jnp.int32)
-              ).reshape(slots, max_pages)
-    pos = jnp.full((slots,), max_pages * b_k - 1, jnp.int32)
-    fn = jax.jit(lambda q, ck, cv: ops.paged_decode_attention_batched(
-        gates, q, k_pages, v_pages, tables, ck, cv, pos, cfg,
-        use_kernel=True))
-    return time_call(fn, q, cmp_k, cmp_v)
+    state = {
+        "gates": jax.nn.softmax(jax.random.normal(ks[1], (slots, h, 3)), -1),
+        "q": jax.random.normal(ks[0], (slots, h, d)),
+        "k_pages": jax.random.normal(ks[2], (num_pages, b_k, h_k, d)),
+        "v_pages": jax.random.normal(ks[3], (num_pages, b_k, h_k, d)),
+        "cmp_k": jax.random.normal(ks[4], (slots, n_cmp, h_k, d)),
+        "cmp_v": jax.random.normal(ks[5], (slots, n_cmp, h_k, d)),
+        "tables": (1 + jnp.arange(slots * max_pages, dtype=jnp.int32)
+                   ).reshape(slots, max_pages),
+        "pos": jnp.full((slots,), max_pages * b_k - 1, jnp.int32),
+    }
+    return cfg, state
+
+
+def registry_rows(backends="all", n=256, g=2, h_k=2, d=32, b_k=16, t_sel=4,
+                  slots=4, max_pages=8):
+    """One latency row per (capable backend, benchmarked mode), driven from
+    the ``repro.attention`` registry.  Backends whose declared ``min_g``
+    exceeds the sweep's g are benchmarked at their minimum supported group
+    size (tagged in the row) instead of being skipped silently."""
+    want = None if backends in ("all", None) else set(backends.split(","))
+    if want is not None:
+        unknown = want - set(list_backends())
+        if unknown:
+            raise SystemExit(f"unknown backend(s) {sorted(unknown)}; "
+                             f"registered: {', '.join(list_backends())}")
+    rows = []
+    states = {}
+    paged = {}
+
+    def nsa_bench(name, caps):
+        g_eff = max(g, caps.min_g)
+        if g_eff not in states:
+            states[g_eff] = _nsa_state(n, g_eff, h_k, d, b_k, t_sel)
+        cfg, p, gates, q, k, v = states[g_eff]
+        fn = jax.jit(lambda gates, q, k, v: nsa_attention(
+            p, gates, q, k, v, cfg=cfg, mode="prefill", backend=name,
+            needs_grad=False))
+        tag = f"@g{g_eff}" if g_eff != g else ""
+        return {"backend": name, "mode": "prefill", "g": g_eff,
+                "key": f"prefill/{name}{tag}",
+                "us": time_call(fn, gates, q, k, v)}
+
+    def flash_bench(name, algorithm):
+        if g not in states:
+            states[g] = _nsa_state(n, g, h_k, d, b_k, t_sel)
+        cfg, p, gates, q, k, v = states[g]
+        fn = jax.jit(lambda q, k, v: nsa_attention(
+            None, None, q, k, v, cfg=cfg, mode="prefill", backend=name,
+            algorithm=algorithm))
+        return {"backend": name, "mode": f"prefill/{algorithm}", "g": g,
+                "key": f"{algorithm}/{name}", "us": time_call(fn, q, k, v)}
+
+    def paged_bench(name):
+        if not paged:
+            paged["state"] = _paged_state(b_k, t_sel, h_k, g, d, slots,
+                                          max_pages)
+        cfg, st = paged["state"]
+        fn = jax.jit(lambda q, ck, cv: nsa_attention(
+            None, st["gates"], q, st["k_pages"], st["v_pages"],
+            {"page_tables": st["tables"], "cmp_k": ck, "cmp_v": cv,
+             "pos": st["pos"]},
+            cfg=cfg, mode="paged_decode", backend=name))
+        return {"backend": name, "mode": "paged_decode", "g": g,
+                "key": f"paged_decode/{name}",
+                "us": time_call(fn, st["q"], st["cmp_k"], st["cmp_v"])}
+
+    for name, caps in list_backends().items():
+        if want is not None and name not in want:
+            continue
+        if "nsa" in caps.algorithms and "prefill" in caps.modes:
+            rows.append(nsa_bench(name, caps))
+        if "full" in caps.algorithms and "prefill" in caps.modes:
+            rows.append(flash_bench(name, "full"))
+        if "sliding" in caps.algorithms and "prefill" in caps.modes:
+            rows.append(flash_bench(name, "sliding"))
+        if "paged_decode" in caps.modes:
+            rows.append(paged_bench(name))
+    return rows
 
 
 def v5e_projection():
@@ -116,16 +179,20 @@ def v5e_projection():
 
 def main(argv=None):
     ap = argparse.ArgumentParser()
+    ap.add_argument("--backend", default="all",
+                    help="'all' (sweep every capable registered backend) or "
+                         "a comma-separated list of registry names")
     ap.add_argument("--json-out", default=None,
                     help="write a BENCH_kernel.json trajectory point here")
     ap.add_argument("--tiny", action="store_true",
                     help="CI bench-smoke shapes (smaller N)")
     args = ap.parse_args(argv)
 
-    shape = dict(n=64, b_k=8, t_sel=2) if args.tiny else {}
-    cpu_rows = cpu_kernel_times(**shape)
-    for name, us in cpu_rows:
-        print(f"kernel_bench,{name}_cpu_interpret,{us:.0f}")
+    shape = dict(n=64, b_k=8, t_sel=2, slots=2, max_pages=4) if args.tiny \
+        else {}
+    rows = registry_rows(args.backend, **shape)
+    for r in rows:
+        print(f"kernel_bench,{r['key']}_cpu_interpret,{r['us']:.0f}")
     proj = v5e_projection()
     print("kernel_bench_v5e,N,B_K,T,g,fsa_us,nsa_us,full_us,speedup_vs_nsa,"
           "speedup_vs_full")
@@ -135,10 +202,12 @@ def main(argv=None):
               f"{r['speedup_vs_nsa']:.2f},{r['speedup_vs_full']:.2f}")
     if args.json_out:
         write_results(args.json_out, "kernel_bench", {
-            "cpu_interpret_us": dict(cpu_rows),
+            "cpu_interpret_us": {r["key"]: r["us"] for r in rows},
+            "backend_rows": rows,
             "v5e_projection": proj,
             "tiny": args.tiny,
         })
+    return rows
 
 
 if __name__ == "__main__":

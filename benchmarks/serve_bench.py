@@ -23,16 +23,17 @@ try:
     from benchmarks.results import write_results
 except ImportError:      # script-style run: benchmarks/ itself is sys.path[0]
     from results import write_results
+from repro.attention import AttentionRequest, resolve
 from repro.configs import get_config, reduced
 from repro.serving import Engine
 
 
 def run_workload(cfg, *, slots, n_requests, min_prompt, max_prompt, new_tokens,
                  release_every, prefill_chunk=None, seed=0, quiet=False,
-                 use_kernel=None):
+                 backend=None):
     """Release requests gradually; drive the engine until drained."""
     eng = Engine(cfg, n_slots=slots, max_len=max_prompt + new_tokens + 8,
-                 prefill_chunk=prefill_chunk, use_kernel=use_kernel)
+                 prefill_chunk=prefill_chunk, backend=backend)
     rng = np.random.default_rng(seed)
     pending = [rng.integers(0, cfg.vocab, size=(int(rng.integers(
         min_prompt, max_prompt + 1)),)) for _ in range(n_requests)]
@@ -53,7 +54,8 @@ def run_workload(cfg, *, slots, n_requests, min_prompt, max_prompt, new_tokens,
     out = {
         "requests": len(reqs),
         "prompt_lens": [len(r.prompt) for r in reqs],
-        "decode_kernel": bool(eng.cfg.nsa.paged_kernel),
+        "decode_backend": resolve(
+            eng.cfg.nsa, AttentionRequest(mode="paged_decode", paged=True)).name,
         "wall_s": wall,
         "decode_tok_s": s["decode_tokens_per_s"],
         "prefill_tok_s": s["prefill_tokens_per_s"],
@@ -88,9 +90,13 @@ def main():
                     help="engine ticks between request releases")
     ap.add_argument("--full-size", action="store_true",
                     help="run the full-size config (default: reduced CPU)")
+    ap.add_argument("--backend", default=None,
+                    help="paged-decode backend (registry name, e.g. "
+                         "paged_kernel | paged_gather); default: cfg policy")
     ap.add_argument("--no-kernel", action="store_true",
                     help="decode via the gather reference instead of the "
-                         "Pallas paged-decode kernel")
+                         "Pallas paged-decode kernel (alias for "
+                         "--backend paged_gather)")
     ap.add_argument("--json-out", default=None,
                     help="write a BENCH_serve.json trajectory point here")
     args = ap.parse_args()
@@ -102,7 +108,8 @@ def main():
                        min_prompt=args.min_prompt, max_prompt=args.max_prompt,
                        new_tokens=args.new_tokens,
                        release_every=args.release_every,
-                       use_kernel=False if args.no_kernel else None)
+                       backend="paged_gather" if args.no_kernel
+                       else args.backend)
     if args.json_out:
         write_results(args.json_out, "serve_bench",
                       dict(out, arch=args.arch, full_size=args.full_size))

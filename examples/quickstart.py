@@ -10,14 +10,16 @@ Run:  PYTHONPATH=src python examples/quickstart.py
 import jax
 import jax.numpy as jnp
 
+from repro.attention import (KernelPolicy, list_backends, nsa_attention,
+                             selected_attention)
 from repro.core import (NSAConfig, apply_gates, compressed_and_selection,
-                        init_nsa_params, nsa_attention)
-from repro.kernels import ops, ref
+                        init_nsa_params)
+from repro.kernels import ref
 
 # ---------------------------------------------------------------- 1. kernel
 cfg = NSAConfig(block_size=16, num_selected=4, cmp_block_size=8, cmp_stride=4,
-                window_size=32, q_block_size=32, kernel="fsa",
-                min_seq_for_sparse=1)
+                window_size=32, q_block_size=32, min_seq_for_sparse=1,
+                policy=KernelPolicy(backend="fsa"))
 N, h, h_k, d = 256, 4, 2, 32
 ks = jax.random.split(jax.random.PRNGKey(0), 5)
 q = jax.random.normal(ks[0], (N, h, d))
@@ -26,15 +28,18 @@ v = jax.random.normal(ks[2], (N, h_k, d))
 params = init_nsa_params(ks[3], 64, h, d, cfg)
 
 _, idx, valid = compressed_and_selection(params, q, k, v, cfg, q_chunk=64)
-out_kernel = ops.selected_attention(q, k, v, idx, valid, cfg)
+out_kernel = selected_attention(q, k, v, idx, valid, cfg)   # policy: fsa
 out_oracle = ref.selected_ref(q, k, v, idx, valid, cfg)
 err = float(jnp.abs(out_kernel - out_oracle).max())
 print(f"[1] FSA selected-attention kernel vs oracle: max err {err:.2e}")
 
 # ---------------------------------------------------------------- 2. module
+# one entry for every backend in the registry; "auto" resolves by capability
+print(f"[2] registered attention backends: {', '.join(list_backends())}")
 gates = apply_gates(params, jax.random.normal(ks[4], (N, 64)))
-out = nsa_attention(params, gates, q, k, v, cfg, impl="kernel")
-print(f"[2] full NSA module (compressed+selected+sliding): {out.shape}, "
+out = nsa_attention(params, gates, q, k, v, cfg=cfg, mode="prefill",
+                    backend="fsa")
+print(f"    full NSA module via backend='fsa': {out.shape}, "
       f"finite={bool(jnp.isfinite(out).all())}")
 
 # ---------------------------------------------------------------- 3. train

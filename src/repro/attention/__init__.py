@@ -1,0 +1,62 @@
+"""repro.attention — unified attention dispatch API.
+
+One functional entry (:func:`nsa_attention`), a capability-based backend
+registry (:func:`register_backend` / :func:`resolve` /
+:func:`list_backends`), and the :class:`KernelPolicy` implementation bundle
+split out of :class:`~repro.core.nsa_config.NSAConfig`.
+
+All string/bool implementation dispatch lives inside this package; the old
+NSAConfig ``kernel`` / ``selected_impl`` / ``paged_kernel`` and the
+``use_kernel`` bool spellings survive one release as deprecation shims.
+"""
+from repro.core.nsa_config import KernelPolicy, NSAConfig
+
+from repro.attention.registry import (
+    ALGORITHMS,
+    MODES,
+    AttentionBackend,
+    AttentionRequest,
+    BackendResolutionError,
+    Capabilities,
+    capable_backends,
+    get_backend,
+    list_backends,
+    register_backend,
+    resolve,
+)
+from repro.attention import backends as _backends  # registers the backends
+from repro.attention.api import normalize_backend_name, nsa_attention
+from repro.attention.backends import (
+    SELECTED_KERNELS,
+    default_selected_kernel,
+    flash_attention,
+    paged_decode_attention,
+    selected_attention,
+    sparse_selected_fn,
+)
+from repro.attention.vjp import twin_vjp
+
+__all__ = [
+    "ALGORITHMS",
+    "MODES",
+    "AttentionBackend",
+    "AttentionRequest",
+    "BackendResolutionError",
+    "Capabilities",
+    "KernelPolicy",
+    "NSAConfig",
+    "SELECTED_KERNELS",
+    "capable_backends",
+    "default_selected_kernel",
+    "flash_attention",
+    "get_backend",
+    "list_backends",
+    "normalize_backend_name",
+    "nsa_attention",
+    "paged_decode_attention",
+    "register_backend",
+    "resolve",
+    "selected_attention",
+    "sparse_selected_fn",
+    "twin_vjp",
+]

@@ -1,0 +1,453 @@
+"""Registered attention backends.
+
+Each backend wraps one kernel organization of the same math and registers
+itself with declared capabilities.  All string/bool implementation dispatch
+in the repo lives in this package; outside it, callers go through
+``repro.attention.nsa_attention`` / ``resolve``.
+
+Backends (see README "Attention API" for the full table):
+
+  fsa            FSA-TPU Pallas kernel for the selected branch (block-union)
+  fsa_faithful   paper-structure three-kernel pipeline (ablation)
+  nsa            vanilla-NSA-style baseline kernel (g padded to 8)
+  sparse_union   FSA organization in XLA ops (production CPU/backward path)
+  sparse_gather  naive per-token gather (baseline; also the decode backend)
+  reference      dense-mask oracle for every algorithm and mode
+  flash_full     Pallas flash full attention
+  flash_sliding  Pallas flash sliding-window attention
+  paged_kernel   Pallas paged-decode kernel (serving; slots folded into M)
+  paged_gather   gather-through-page-table paged decode (serving reference)
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import indexing, sparse
+from repro.core import attention as core_attn
+from repro.core.nsa_config import NSAConfig
+from repro.core.paging import gather_rows
+from repro.core.reference import (_gqa_out, _gqa_scores, _safe_softmax,
+                                  nsa_attention_ref)
+from repro.kernels import flash_attention as _flash
+from repro.kernels import fsa_faithful as _faithful
+from repro.kernels import fsa_selected as _fsa
+from repro.kernels import nsa_selected as _nsa
+from repro.kernels import paged_decode as _paged
+from repro.kernels import ref as _ref
+from repro.attention.registry import Capabilities, register_backend
+from repro.attention.vjp import twin_vjp
+
+SELECTED_KERNELS = ("fsa", "fsa_faithful", "nsa", "reference")
+
+
+def _pad_tokens(x, n_pad):
+    return jnp.pad(x, ((0, n_pad - x.shape[0]),) + ((0, 0),) * (x.ndim - 1))
+
+
+# =====================================================================
+# selected branch: Pallas kernel forward + chunked-gather XLA twin
+# =====================================================================
+def _selected_fwd_impl(static, q, k, v, idx, valid):
+    cfg, kernel = static
+    n, h, d = q.shape
+    h_k = k.shape[1]
+    g = h // h_k
+    bq = min(cfg.q_block_size, max(8, n))
+    n_pad = ((n + bq - 1) // bq) * bq
+
+    qp = _pad_tokens(q, n_pad)
+    idxp = _pad_tokens(idx, n_pad)
+    validp = _pad_tokens(valid, n_pad)
+    # normalize: ascending sort, duplicates invalidated (top-k selection never
+    # produces dups, but the kernel contract must not depend on that)
+    key = jnp.where(validp, idxp, jnp.iinfo(jnp.int32).max // 2)
+    order = jnp.argsort(key, axis=-1)
+    idxp = jnp.take_along_axis(idxp, order, axis=-1)
+    validp = jnp.take_along_axis(validp, order, axis=-1)
+    dup = jnp.concatenate(
+        [jnp.zeros_like(validp[..., :1]),
+         (idxp[..., 1:] == idxp[..., :-1]) & validp[..., 1:] & validp[..., :-1]],
+        axis=-1)
+    validp &= ~dup
+    sel = jnp.where(validp, idxp, -1).astype(jnp.int32)       # (N, h_K, T)
+    # rows layout for sel: repeat each token's list over the g group heads
+    sel_rows = jnp.repeat(sel.transpose(1, 0, 2), g, axis=1)  # (h_K, N·g, T)
+    q_rows = _ref.rows_from_heads(qp, h_k)
+    k_t = k.transpose(1, 0, 2)
+    v_t = v.transpose(1, 0, 2)
+
+    if kernel == "nsa":
+        g_pad = max(g, 8)
+        q_pad = qp.reshape(n_pad, h_k, g, d).transpose(1, 0, 2, 3)
+        q_pad = jnp.pad(q_pad, ((0, 0), (0, 0), (0, g_pad - g), (0, 0)))
+        o = _nsa.nsa_selected(q_pad, k_t, v_t, sel.transpose(1, 0, 2),
+                              block_k=cfg.block_size, interpret=cfg.interpret)
+        o = o[:, :, :g].transpose(1, 0, 2, 3).reshape(n_pad, h, -1)
+        return o[:n]
+
+    kv_ids, kv_cnt = indexing.build_qblock_union(idxp, validp, cfg, k.shape[0])
+    if kernel == "fsa":
+        o_rows = _fsa.fsa_selected(q_rows, k_t, v_t, sel_rows, kv_ids, kv_cnt,
+                                   g=g, block_q=bq, block_k=cfg.block_size,
+                                   interpret=cfg.interpret)
+    elif kernel == "fsa_faithful":
+        q_ids, slot_ids, q_cnt = indexing.build_kvblock_qlists(
+            idxp, validp, cfg, k.shape[0], union_cap=kv_ids.shape[-1])
+        o_rows = _faithful.fsa_faithful(q_rows, k_t, v_t, sel_rows, kv_ids,
+                                        kv_cnt, q_ids, slot_ids, q_cnt, g=g,
+                                        block_q=bq, block_k=cfg.block_size,
+                                        interpret=cfg.interpret)
+    elif kernel == "reference":
+        return _ref.selected_ref(q, k, v, idx, valid, cfg)
+    else:
+        raise ValueError(f"unknown selected kernel: {kernel}")
+    return _ref.heads_from_rows(o_rows, n_pad)[:n]
+
+
+def _selected_twin(static, q, k, v, idx, valid):
+    """Differentiable twin of the selected kernels (chunked gather path)."""
+    cfg, _ = static
+    n = q.shape[0]
+    c = min(512, n)
+    pad = (c - n % c) % c
+    qp, idxp, validp = (_pad_tokens(a, n + pad) for a in (q, idx, valid))
+
+    def body(args):
+        q_c, i_c, v_c, pos_c = args
+        return sparse.selected_gather_attention(q_c, k, v, i_c, v_c, cfg, pos_c)
+
+    nc = (n + pad) // c
+    out = jax.lax.map(body, (qp.reshape(nc, c, *q.shape[1:]),
+                             idxp.reshape(nc, c, *idx.shape[1:]),
+                             validp.reshape(nc, c, *valid.shape[1:]),
+                             jnp.arange(n + pad).reshape(nc, c)))
+    return out.reshape(n + pad, q.shape[1], -1)[:n]
+
+
+_selected_op = twin_vjp(_selected_fwd_impl, _selected_twin, num_diff=3)
+
+
+def default_selected_kernel(cfg: NSAConfig) -> str:
+    """The Pallas selected-branch kernel the policy names (fsa if the policy
+    names a non-kernel backend such as ``auto`` or ``sparse_union``)."""
+    b = cfg.policy.backend
+    return b if b in SELECTED_KERNELS else "fsa"
+
+
+def selected_attention(q, k, v, idx, valid, cfg: NSAConfig,
+                       kernel: str | None = None):
+    """Selected-branch attention through the named Pallas kernel.
+    q: (N,h,d), k/v: (S,h_K,d), idx/valid: (N,h_K,T)."""
+    return _selected_op((cfg, kernel or default_selected_kernel(cfg)),
+                        q, k, v, idx, valid)
+
+
+# =====================================================================
+# flash full / sliding: Pallas kernel forward + chunked-reference twin
+# =====================================================================
+def _flash_fwd_impl(static, q, k, v):
+    cfg, causal, window = static
+    n, h, d = q.shape
+    h_k = k.shape[1]
+    g = h // h_k
+    bq = min(cfg.q_block_size, max(8, n))
+    n_pad = ((n + bq - 1) // bq) * bq
+    q_rows = _ref.rows_from_heads(_pad_tokens(q, n_pad), h_k)
+    o_rows = _flash.flash_attention(
+        q_rows, k.transpose(1, 0, 2), v.transpose(1, 0, 2), g=g, causal=causal,
+        window=window, block_q=bq, block_k=min(128, k.shape[0]),
+        interpret=cfg.interpret)
+    return _ref.heads_from_rows(o_rows, n_pad)[:n]
+
+
+def _flash_twin(static, q, k, v):
+    _, causal, window = static
+    return _ref.flash_ref_chunked(q, k, v, causal=causal, window=window)
+
+
+_flash_op = twin_vjp(_flash_fwd_impl, _flash_twin, num_diff=3)
+
+
+def flash_attention(q, k, v, cfg: NSAConfig, *, causal: bool = True,
+                    window: int | None = None):
+    """Pallas flash attention (full or sliding-window)."""
+    return _flash_op((cfg, causal, window), q, k, v)
+
+
+# =====================================================================
+# paged decode: shared compressed prologue + kernel / gather organizations
+# =====================================================================
+def _paged_sel_win_ref(q, k_pages, v_pages, page_table, idx, valid, pos,
+                       cfg: NSAConfig):
+    """Gather-through-page-table reference for ONE slot's selected + sliding
+    branches.  q: (h, d); idx/valid: (h_k, T); pos: scalar.
+    Returns (out_sel, out_win): each (h, dv) float32.
+    """
+    h, d = q.shape
+    p_sz, h_k = k_pages.shape[1], k_pages.shape[2]
+    g = h // h_k
+
+    # --- selected branch: gather exactly the T physical pages per KV head
+    #     (each head pulls only its own rows of its own pages) ---
+    t = idx.shape[-1]
+    phys = page_table[idx]                                  # (h_k, T)
+    hk_i = jnp.arange(h_k)
+    k_sel = jax.vmap(lambda ph, i: k_pages[ph, :, i])(phys, hk_i)
+    v_sel = jax.vmap(lambda ph, i: v_pages[ph, :, i])(phys, hk_i)
+    k_sel = k_sel.reshape(h_k, t * p_sz, d)                 # (h_k, T·P, d)
+    v_sel = v_sel.reshape(h_k, t * p_sz, -1)
+    tok_pos = (idx[..., None] * p_sz + jnp.arange(p_sz)).reshape(h_k, t * p_sz)
+    sel_mask = jnp.repeat(valid, p_sz, axis=-1) & (tok_pos <= pos)
+    qg = q.reshape(h_k, g, d).astype(jnp.float32)
+    s_sel = jnp.einsum("kgd,ksd->kgs", qg, k_sel.astype(jnp.float32))
+    s_sel = s_sel / jnp.sqrt(d).astype(jnp.float32)
+    p_sel, _ = _safe_softmax(s_sel, sel_mask[:, None, :])
+    out_sel = jnp.einsum("kgs,ksd->kgd", p_sel, v_sel.astype(jnp.float32))
+
+    # --- sliding branch: the trailing window through the page table ---
+    w = cfg.window_size
+    win_rows = pos - (w - 1) + jnp.arange(w)
+    k_win = gather_rows(k_pages, page_table, win_rows)      # (W, h_k, d)
+    v_win = gather_rows(v_pages, page_table, win_rows)
+    win_mask = (win_rows >= 0) & (win_rows <= pos)
+    p_win, _ = _safe_softmax(_gqa_scores(q[None], k_win),
+                             win_mask[None, None, :])
+    out_win = _gqa_out(p_win, v_win)[0]
+    return out_sel.reshape(h, -1), out_win
+
+
+def paged_decode_attention(gates, q, k_pages, v_pages, page_tables,
+                           cmp_k, cmp_v, pos, cfg: NSAConfig, *,
+                           kernel: bool, block_s: int | None = None):
+    """Batched multi-slot NSA decode reading KV through per-slot page tables —
+    touches ONLY the pages the three branches address (page size == B_K, so
+    one selected block is one physical page):
+
+      compressed  all compressed-token rows (already gathered views — they
+                  are O(N/stride) small)
+      selected    the T pages named by ``page_table[idx]`` per slot
+      sliding     the trailing ceil(W/B_K)+1 pages per slot
+
+    gates: (B, h, 3); q: (B, h, d); k_pages/v_pages: (N_pages, P, h_k, d*);
+    page_tables: (B, max_pages) int32; cmp_k/cmp_v: (B, N_cmp_max, h_k, d*);
+    pos: (B,).  Returns (B, h, dv).
+
+    ``kernel=True`` runs the Pallas paged-decode kernel: ``fsa_selected``'s
+    BlockSpec pattern with the kv index_map composed through the page table
+    (ids -> page_table[ids]) and B slots folded into the matmul M dimension —
+    one launch per engine tick.  ``kernel=False`` is the gather reference
+    (still a single batched dispatch, vmapped over slots).  The compressed
+    prologue is shared with the dense-cache decode via
+    ``sparse.decode_cmp_and_select`` on both paths.
+    """
+    b, h, d = q.shape
+    p_sz, h_k = k_pages.shape[1], k_pages.shape[2]
+    assert p_sz == cfg.block_size, "page size must equal the NSA block size"
+    g = h // h_k
+    s_max = page_tables.shape[1] * p_sz
+
+    # --- compressed branch + top-T selection (shared with the dense path;
+    #     logical block id == page-table index) ---
+    out_cmp, idx, valid = jax.vmap(
+        lambda q1, ck, cv, p1: sparse.decode_cmp_and_select(
+            q1[None], ck, cv, p1, cfg, s_max))(q, cmp_k, cmp_v, pos)
+    out_cmp = out_cmp[:, 0]                                  # (B, h, dv)
+    idx, valid = idx[:, 0], valid[:, 0]                      # (B, h_k, T)
+
+    if kernel:
+        bs = block_s or cfg.paged_slot_block or max(1, -(-8 // g))
+        bs = min(bs, b)
+        pad = (-b) % bs
+        if pad:
+            q_p = jnp.pad(q, ((0, pad), (0, 0), (0, 0)))
+            tables_p = jnp.pad(page_tables, ((0, pad), (0, 0)))
+            idx_p = jnp.pad(idx, ((0, pad), (0, 0), (0, 0)))
+            valid_p = jnp.pad(valid, ((0, pad), (0, 0), (0, 0)))
+            pos_p = jnp.pad(pos, ((0, pad),))
+        else:
+            q_p, tables_p, idx_p, valid_p, pos_p = (q, page_tables, idx,
+                                                    valid, pos)
+        bp = b + pad
+        pages, blks = _paged.build_decode_steps(
+            idx_p, valid_p, tables_p, pos_p, window=cfg.window_size,
+            page_size=p_sz, block_s=bs)
+        q_rows = (q_p.reshape(bp, h_k, g, d).transpose(1, 0, 2, 3)
+                     .reshape(h_k, bp * g, d))
+        o_sel, o_win = _paged.paged_decode(
+            q_rows, k_pages, v_pages, pages, blks, pos_p.astype(jnp.int32),
+            g=g, block_s=bs, num_sel=idx.shape[-1], window=cfg.window_size,
+            interpret=cfg.interpret)
+        dv = o_sel.shape[-1]
+        unfold = lambda o: (o.reshape(h_k, bp, g, dv).transpose(1, 0, 2, 3)
+                             .reshape(bp, h, dv)[:b])
+        out_sel, out_win = unfold(o_sel), unfold(o_win)
+    else:
+        out_sel, out_win = jax.vmap(
+            lambda q1, tb, i1, v1, p1: _paged_sel_win_ref(
+                q1, k_pages, v_pages, tb, i1, v1, p1, cfg))(
+                    q, page_tables, idx, valid, pos)
+
+    gf = gates.astype(jnp.float32)
+    out = (gf[..., 0:1] * out_cmp.astype(jnp.float32)
+           + gf[..., 1:2] * out_sel
+           + gf[..., 2:3] * out_win)
+    return out.astype(q.dtype)
+
+
+# =====================================================================
+# backend registrations
+# =====================================================================
+def _kernel_nsa(params, gates, q, k, v, cfg, kernel, q_chunk):
+    """Three-branch NSA with the selected branch on a Pallas kernel and the
+    sliding branch on the Pallas flash kernel (the old impl="kernel")."""
+    out_cmp, idx, valid = core_attn.compressed_and_selection(
+        params, q, k, v, cfg, q_chunk=q_chunk)
+    out_sel = selected_attention(q, k, v, idx, valid, cfg, kernel=kernel)
+    out_win = flash_attention(q, k, v, cfg, causal=True,
+                              window=cfg.window_size)
+    gf = gates.astype(jnp.float32)
+    out = (gf[..., 0:1] * out_cmp.astype(jnp.float32)
+           + gf[..., 1:2] * out_sel.astype(jnp.float32)
+           + gf[..., 2:3] * out_win.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+def _register_selected_kernel_backend(name, caps):
+    @register_backend(name, capabilities=caps)
+    def backend(params, gates, q, k, v, cache, cfg, mode,
+                q_chunk: int = 512, **kw):
+        return _kernel_nsa(params, gates, q, k, v, cfg, name, q_chunk)
+    return backend
+
+
+_register_selected_kernel_backend("fsa", Capabilities(
+    modes=("train", "prefill"), algorithms=("nsa",), differentiable=True,
+    priority=60, preferred_platforms=("tpu",)))
+
+_register_selected_kernel_backend("fsa_faithful", Capabilities(
+    modes=("train", "prefill"), algorithms=("nsa",), differentiable=True,
+    priority=40, preferred_platforms=("tpu",)))
+
+# The vanilla-NSA loop order keeps one query row per (token, head) in the
+# MXU M dim, so it only fills the matmul when the GQA group is wide: the
+# paper's regime analysis (and our analytic model) put its win at g >= 8.
+_register_selected_kernel_backend("nsa", Capabilities(
+    modes=("train", "prefill"), algorithms=("nsa",), differentiable=True,
+    min_g=8, priority=20, preferred_platforms=("tpu",)))
+
+
+@register_backend("sparse_union", capabilities=Capabilities(
+    modes=("train", "prefill"), algorithms=("nsa",), differentiable=True,
+    priority=70))
+def _sparse_union_backend(params, gates, q, k, v, cache, cfg, mode,
+                          q_chunk: int = 512, **kw):
+    return sparse.nsa_attention_sparse(
+        params, gates, q, k, v, cfg, q_chunk=q_chunk,
+        selected_fn=sparse.selected_union_attention)
+
+
+@register_backend("sparse_gather", capabilities=Capabilities(
+    modes=("train", "prefill", "decode"), algorithms=("nsa",),
+    differentiable=True, priority=20))
+def _sparse_gather_backend(params, gates, q, k, v, cache, cfg, mode,
+                           q_chunk: int = 512, **kw):
+    if mode == "decode":
+        return sparse.nsa_decode_step(params, gates, q, k, v,
+                                      cache["cmp_k"], cache["cmp_v"],
+                                      cache["pos"], cfg)
+    return sparse.nsa_attention_sparse(
+        params, gates, q, k, v, cfg, q_chunk=q_chunk,
+        selected_fn=sparse.selected_gather_attention)
+
+
+@register_backend("flash_full", capabilities=Capabilities(
+    modes=("train", "prefill"), algorithms=("full",), differentiable=True,
+    priority=5, preferred_platforms=("tpu",)))
+def _flash_full_backend(params, gates, q, k, v, cache, cfg, mode,
+                        causal: bool = True, **kw):
+    return flash_attention(q, k, v, cfg, causal=causal, window=None)
+
+
+@register_backend("flash_sliding", capabilities=Capabilities(
+    modes=("train", "prefill"), algorithms=("sliding",), differentiable=True,
+    priority=5, preferred_platforms=("tpu",)))
+def _flash_sliding_backend(params, gates, q, k, v, cache, cfg, mode,
+                           window: int | None = None, **kw):
+    return flash_attention(q, k, v, cfg, causal=True,
+                           window=window or cfg.window_size)
+
+
+@register_backend("paged_kernel", capabilities=Capabilities(
+    modes=("paged_decode",), algorithms=("nsa",), paged=True, priority=50))
+def _paged_kernel_backend(params, gates, q, k, v, cache, cfg, mode,
+                          block_s: int | None = None, **kw):
+    return paged_decode_attention(
+        gates, q, k, v, cache["page_tables"], cache["cmp_k"], cache["cmp_v"],
+        cache["pos"], cfg, kernel=True, block_s=block_s)
+
+
+@register_backend("paged_gather", capabilities=Capabilities(
+    modes=("paged_decode",), algorithms=("nsa",), paged=True, priority=20))
+def _paged_gather_backend(params, gates, q, k, v, cache, cfg, mode,
+                          block_s: int | None = None, **kw):
+    return paged_decode_attention(
+        gates, q, k, v, cache["page_tables"], cache["cmp_k"], cache["cmp_v"],
+        cache["pos"], cfg, kernel=False, block_s=block_s)
+
+
+def sparse_selected_fn(cfg: NSAConfig):
+    """The sparse selected-branch organization the policy names — for code
+    (e.g. paged chunked prefill) that runs the sparse NSA chunk machinery
+    directly and needs the union/gather choice without string dispatch of
+    its own."""
+    if cfg.policy.backend == "sparse_gather":
+        return sparse.selected_gather_attention
+    return sparse.selected_union_attention
+
+
+def _reference_decode(params, gates_t, q_t, k_cache, v_cache, cache, cfg):
+    """Dense-oracle one-token decode: embed the query at row ``pos`` of a
+    full-shape sequence and run the dense NSA oracle.  Recomputes the
+    compression caches from the raw KV (independent of the incremental
+    cmp-cache emission the fast paths maintain), so it cross-checks them.
+    """
+    pos = cache["pos"]
+    s = k_cache.shape[0]
+    q_full = jnp.zeros((s,) + q_t.shape, q_t.dtype).at[pos].set(q_t)
+    g_full = jnp.zeros((s,) + gates_t.shape, jnp.float32).at[pos].set(
+        gates_t.astype(jnp.float32))
+    out = nsa_attention_ref(params, g_full, q_full, k_cache, v_cache, cfg)
+    return jnp.take(out, pos, axis=0).astype(q_t.dtype)
+
+
+@register_backend("reference", capabilities=Capabilities(
+    modes=("train", "prefill", "decode", "paged_decode"),
+    algorithms=("nsa", "full", "sliding"), differentiable=True, paged=True,
+    priority=10))
+def _reference_backend(params, gates, q, k, v, cache, cfg, mode,
+                       algorithm: str = "nsa", causal: bool = True,
+                       window: int | None = None, q_chunk: int = 512, **kw):
+    if algorithm == "full":
+        return _ref.flash_ref_chunked(q, k, v, causal=causal, q_chunk=q_chunk)
+    if algorithm == "sliding":
+        return _ref.flash_ref_chunked(q, k, v, causal=True,
+                                      window=window or cfg.window_size,
+                                      q_chunk=q_chunk)
+    if mode == "decode":
+        return _reference_decode(params, gates, q, k, v, cache, cfg)
+    if mode == "paged_decode":
+        # gather full dense views through the page tables, then run the
+        # dense-cache decode path on them — checks the paged organizations
+        # at a different gather granularity (whole view vs selected pages)
+        tables, pos = cache["page_tables"], cache["pos"]
+        s_max = tables.shape[1] * k.shape[1]
+        rows = jnp.arange(s_max)
+        k_view = jax.vmap(gather_rows, in_axes=(None, 0, None))(k, tables, rows)
+        v_view = jax.vmap(gather_rows, in_axes=(None, 0, None))(v, tables, rows)
+        return jax.vmap(
+            lambda g1, q1, kv1, vv1, ck, cv, p1: sparse.nsa_decode_step(
+                params, g1, q1, kv1, vv1, ck, cv, p1, cfg))(
+                    gates, q, k_view, v_view, cache["cmp_k"], cache["cmp_v"],
+                    pos)
+    return nsa_attention_ref(params, gates, q, k, v, cfg)

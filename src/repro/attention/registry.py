@@ -1,0 +1,229 @@
+"""Capability-based attention backend registry.
+
+Every attention implementation in the repo registers here under a unique
+name with a declared :class:`Capabilities` record.  Callers never dispatch
+on strings or bools themselves: they describe *what they need* as an
+:class:`AttentionRequest` and :func:`resolve` returns the best capable
+backend — or raises a :class:`BackendResolutionError` that names the
+capable alternatives.
+
+This is the FSA/NSA thesis turned into an API: multiple kernel
+organizations of the same math win in different regimes (GQA group size
+``g``, sequence length, platform), so the *selection* of an organization is
+data, not code scattered over if/elif ladders.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional, Protocol, runtime_checkable
+
+MODES = ("train", "prefill", "decode", "paged_decode")
+ALGORITHMS = ("nsa", "full", "sliding")
+
+
+@dataclasses.dataclass(frozen=True)
+class Capabilities:
+    """What a backend can do.  ``resolve`` only ever picks a backend whose
+    capabilities cover the request; an explicit backend request that falls
+    outside its capabilities is a structured error, not a silent fallback."""
+
+    modes: tuple = ("train", "prefill")   # subset of MODES
+    algorithms: tuple = ("nsa",)          # subset of ALGORITHMS
+    differentiable: bool = False          # safe under jax.grad (custom VJP ok)
+    min_g: int = 1                        # supported GQA group-size range
+    max_g: Optional[int] = None
+    paged: bool = False                   # reads KV through page tables
+    interpret_ok: bool = True             # runs in Pallas interpret mode (CPU)
+    priority: int = 0                     # auto-resolve score (higher wins)
+    preferred_platforms: tuple = ()       # +100 priority on these platforms
+
+    def describe(self) -> str:
+        bits = [f"modes={'|'.join(self.modes)}",
+                f"alg={'|'.join(self.algorithms)}"]
+        if self.differentiable:
+            bits.append("grad")
+        if self.min_g > 1 or self.max_g is not None:
+            bits.append(f"g∈[{self.min_g},{self.max_g or '∞'}]")
+        if self.paged:
+            bits.append("paged")
+        if not self.interpret_ok:
+            bits.append("tpu-only")
+        return ", ".join(bits)
+
+
+@dataclasses.dataclass(frozen=True)
+class AttentionRequest:
+    """Shape/mode description a backend must cover.
+
+    ``seq_len`` is the KV span (0 = unknown/irrelevant); ``g`` the GQA group
+    size; ``needs_grad`` whether the call sits under ``jax.grad``;
+    ``paged`` whether KV lives in paged storage; ``interpret`` whether the
+    call must run without a TPU (Pallas interpret mode); ``platform`` the
+    jax default backend ("cpu"/"tpu"/"gpu")."""
+
+    mode: str = "prefill"
+    algorithm: str = "nsa"
+    seq_len: int = 0
+    g: int = 1
+    needs_grad: bool = False
+    paged: bool = False
+    interpret: bool = True
+    platform: str = "cpu"
+
+
+@runtime_checkable
+class AttentionBackend(Protocol):
+    """A registered implementation: a callable with ``name`` and
+    ``capabilities`` attributes.  Call signature (all backends)::
+
+        backend(params, gates, q, k, v, cache, cfg, mode, **kw)
+
+    ``params``/``gates`` are the NSA compression/gate parameters (None for
+    non-NSA algorithms); ``k``/``v`` are the raw KV storage (dense arrays or
+    page pools); ``cache`` carries mode-specific auxiliary state (cmp caches,
+    page tables, positions)."""
+
+    name: str
+    capabilities: Capabilities
+
+    def __call__(self, params, gates, q, k, v, cache, cfg, mode, **kw): ...
+
+
+class BackendResolutionError(ValueError):
+    """No (capable) backend for a request.  Carries the requested name, the
+    request, the rejection reason, and the names of capable alternatives."""
+
+    def __init__(self, requested: str, request: AttentionRequest,
+                 reason: str, alternatives: tuple):
+        self.requested = requested
+        self.request = request
+        self.reason = reason
+        self.alternatives = tuple(alternatives)
+        alt = (f" Capable backends for this request: "
+               f"{', '.join(self.alternatives)}."
+               if self.alternatives else
+               " No registered backend covers this request.")
+        super().__init__(
+            f"attention backend '{requested}' cannot serve "
+            f"mode={request.mode}/algorithm={request.algorithm} "
+            f"(g={request.g}, seq_len={request.seq_len}, "
+            f"needs_grad={request.needs_grad}, paged={request.paged}, "
+            f"platform={request.platform}): {reason}.{alt}")
+
+
+_REGISTRY: dict = {}
+
+
+def register_backend(name: str, *, capabilities: Capabilities) -> Callable:
+    """Decorator: register ``fn`` as attention backend ``name``."""
+
+    def deco(fn):
+        if name in _REGISTRY:
+            raise ValueError(f"attention backend '{name}' already registered")
+        fn.name = name
+        fn.capabilities = capabilities
+        _REGISTRY[name] = fn
+        return fn
+
+    return deco
+
+
+def get_backend(name: str) -> AttentionBackend:
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise KeyError(
+            f"unknown attention backend '{name}'; registered: "
+            f"{', '.join(sorted(_REGISTRY))}") from None
+
+
+def list_backends() -> dict:
+    """name -> Capabilities for every registered backend (sorted by name)."""
+    return {n: _REGISTRY[n].capabilities for n in sorted(_REGISTRY)}
+
+
+def unsupported_reason(caps: Capabilities,
+                       req: AttentionRequest) -> Optional[str]:
+    """Why ``caps`` cannot serve ``req`` (None = it can)."""
+    if req.mode not in caps.modes:
+        return f"mode '{req.mode}' not in declared modes {caps.modes}"
+    if req.algorithm not in caps.algorithms:
+        return (f"algorithm '{req.algorithm}' not in declared algorithms "
+                f"{caps.algorithms}")
+    if req.needs_grad and not caps.differentiable:
+        return "not differentiable (no VJP), but gradients were requested"
+    if req.g < caps.min_g:
+        return f"GQA group size g={req.g} below declared min_g={caps.min_g}"
+    if caps.max_g is not None and req.g > caps.max_g:
+        return f"GQA group size g={req.g} above declared max_g={caps.max_g}"
+    if req.paged and not caps.paged:
+        return "does not read paged KV storage"
+    if req.interpret and not caps.interpret_ok:
+        return "requires compiled Pallas (no interpret-mode support)"
+    return None
+
+
+def capable_backends(req: AttentionRequest) -> tuple:
+    """Names of all registered backends that can serve ``req``."""
+    return tuple(n for n in sorted(_REGISTRY)
+                 if unsupported_reason(_REGISTRY[n].capabilities, req) is None)
+
+
+def _score(caps: Capabilities, req: AttentionRequest) -> int:
+    return caps.priority + (100 if req.platform in caps.preferred_platforms
+                            else 0)
+
+
+def resolve(cfg, request: AttentionRequest,
+            backend: str = "auto") -> AttentionBackend:
+    """Pick the backend for ``request``.
+
+    Explicit ``backend`` names are honored iff capable (else a
+    :class:`BackendResolutionError` naming capable alternatives).  For
+    ``"auto"``, the mode's policy default (``cfg.policy``) is consulted
+    first; if that is also "auto" the highest-scoring capable backend wins
+    (platform preference included).  Below ``cfg.min_seq_for_sparse`` the
+    dense ``reference`` fallback is picked for train/prefill NSA requests —
+    selection is degenerate when the context is shorter than a handful of
+    KV blocks, so sparsity cannot pay for its overhead there.
+    """
+    # decode-time paths exist only for the NSA cache layouts; a full/sliding
+    # decode request is malformed, not merely unserved — fail it up front
+    # rather than letting a backend crash on mismatched shapes
+    if request.mode in ("decode", "paged_decode") and request.algorithm != "nsa":
+        raise BackendResolutionError(
+            backend, request,
+            f"mode '{request.mode}' is NSA-only (algorithm "
+            f"'{request.algorithm}' has no cache-decode path)", ())
+
+    # The policy's per-mode defaults name NSA organizations (that is what
+    # KernelPolicy bundles); full/sliding requests never consult them — the
+    # old cfg.kernel likewise only ever picked the NSA selected-branch
+    # kernel, not the full/swa/cross-attention implementation.
+    if backend == "auto" and cfg is not None and request.algorithm == "nsa":
+        policy = getattr(cfg, "policy", None)
+        if policy is not None:
+            backend = {"train": policy.backend, "prefill": policy.backend,
+                       "decode": policy.decode_backend,
+                       "paged_decode": policy.paged_backend}[request.mode]
+
+    # dense short-sequence fallback (algorithm spec, not a perf heuristic)
+    if (cfg is not None and request.algorithm == "nsa"
+            and request.mode in ("train", "prefill") and request.seq_len
+            and request.seq_len < cfg.min_seq_for_sparse):
+        backend = "reference"
+
+    if backend != "auto":
+        b = get_backend(backend)
+        reason = unsupported_reason(b.capabilities, request)
+        if reason is not None:
+            raise BackendResolutionError(backend, request, reason,
+                                         capable_backends(request))
+        return b
+
+    names = capable_backends(request)
+    if not names:
+        raise BackendResolutionError("auto", request,
+                                     "no capable backend registered", ())
+    return _REGISTRY[max(
+        names, key=lambda n: (_score(_REGISTRY[n].capabilities, request), n))]

@@ -1,0 +1,47 @@
+"""Shared custom-VJP scaffolding for kernel-forward / XLA-twin-backward ops.
+
+Every Pallas forward kernel in this repo pairs with a *differentiable twin*
+— the same math written in gather/einsum XLA ops — and the backward pass is
+``jax.vjp`` through that twin.  The boilerplate (residual packing, float0
+cotangents for integer/bool operands, nondiff static config) used to be
+duplicated per op (``_sel_fwd/_sel_bwd``, ``_flash_fwd/_flash_bwd``); it
+lives once here.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+
+def twin_vjp(fwd_impl, twin_impl, *, num_diff: int):
+    """Build ``op(static, *tensors)`` with a custom VJP.
+
+    ``fwd_impl(static, *tensors)`` runs the (non-differentiable) kernel
+    forward; ``twin_impl(static, *tensors)`` is the XLA twin of identical
+    math.  The first ``num_diff`` tensors receive real cotangents (via
+    ``jax.vjp`` through the twin, rematerialized — nothing big is saved);
+    the rest (selection indices, validity masks, positions) get ``float0``.
+
+    ``static`` must be hashable (e.g. an ``NSAConfig`` or a tuple of
+    hashables) — it is a ``nondiff_argnums`` argument.
+    """
+
+    @functools.partial(jax.custom_vjp, nondiff_argnums=(0,))
+    def op(static, *tensors):
+        return fwd_impl(static, *tensors)
+
+    def fwd(static, *tensors):
+        return fwd_impl(static, *tensors), tensors
+
+    def bwd(static, tensors, dout):
+        diff, nondiff = tensors[:num_diff], tensors[num_diff:]
+        _, pullback = jax.vjp(
+            lambda *d: twin_impl(static, *d, *nondiff), *diff)
+        grads = pullback(dout)
+        zeros = tuple(jnp.zeros(t.shape, jax.dtypes.float0) for t in nondiff)
+        return grads + zeros
+
+    op.defvjp(fwd, bwd)
+    return op

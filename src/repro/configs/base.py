@@ -65,7 +65,10 @@ class ModelConfig:
     n_img_tokens: int = 256
 
     nsa: NSAConfig = dataclasses.field(default_factory=NSAConfig)
-    attn_impl: str = "sparse"        # sparse | kernel | reference
+    # train/prefill attention backend: "auto" or any repro.attention registry
+    # name; legacy aliases "sparse" (-> sparse_union) and "kernel" (-> the
+    # Pallas kernel named by nsa.policy.backend, default fsa) still resolve
+    attn_impl: str = "sparse"
     q_chunk: int = 512               # sparse-path chunk size (perf knob)
 
     remat: bool = True

@@ -1,10 +1,14 @@
-"""Public NSA/FSA attention API with implementation dispatch.
+"""NSA attention helpers + the legacy ``nsa_attention(impl=)`` entry.
 
-impl:
+The implementation dispatch moved to the capability-based registry in
+``repro.attention`` (the single public API); ``nsa_attention`` here is kept
+as a thin compatibility wrapper whose ``impl`` aliases map onto registry
+backend names:
+
   "reference" — dense-mask oracle (test scales only)
-  "sparse"    — chunked gather-based pure-JAX path (dry-run / CPU / long ctx)
-  "kernel"    — Pallas kernels for selected + sliding branches (TPU target;
-                interpret=True on CPU), sparse path for compression/selection
+  "sparse"    — chunked gather-based pure-JAX path -> "sparse_union"
+  "kernel"    — Pallas kernels for selected + sliding branches -> "fsa"
+                (or whichever kernel backend ``cfg.policy.backend`` names)
 """
 from __future__ import annotations
 
@@ -13,9 +17,9 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from repro.core import compression, gating, selection, sparse
+from repro.core import compression, gating, selection
 from repro.core.nsa_config import NSAConfig
-from repro.core.reference import _gqa_out, _gqa_scores, _safe_softmax, nsa_attention_ref
+from repro.core.reference import _gqa_out, _gqa_scores, _safe_softmax
 
 
 def init_nsa_params(key: jax.Array, model_dim: int, num_heads: int, head_dim: int,
@@ -67,24 +71,13 @@ def compressed_and_selection(params, q, k, v, cfg: NSAConfig, *, q_chunk: int = 
 
 def nsa_attention(params, gates, q, k, v, cfg: NSAConfig, *, impl: str = "sparse",
                   q_chunk: int = 512):
-    """NSA attention, unbatched. q: (N,h,d), k/v: (N,h_k,d), gates: (N,h,3)."""
-    n = q.shape[0]
-    if impl == "reference" or n < cfg.min_seq_for_sparse:
-        return nsa_attention_ref(params, gates, q, k, v, cfg)
-    if impl == "sparse":
-        return sparse.nsa_attention_sparse(params, gates, q, k, v, cfg, q_chunk=q_chunk)
-    if impl == "kernel":
-        from repro.kernels import ops  # lazy: kernels are an optional layer
+    """NSA attention, unbatched. q: (N,h,d), k/v: (N,h_k,d), gates: (N,h,3).
 
-        out_cmp, idx, valid = compressed_and_selection(params, q, k, v, cfg,
-                                                       q_chunk=q_chunk)
-        out_sel = ops.selected_attention(q, k, v, idx, valid, cfg)
-        out_win = ops.sliding_attention(q, k, v, cfg.window_size, cfg)
-        gf = gates.astype(jnp.float32)
-        out = (
-            gf[..., 0:1] * out_cmp.astype(jnp.float32)
-            + gf[..., 1:2] * out_sel.astype(jnp.float32)
-            + gf[..., 2:3] * out_win.astype(jnp.float32)
-        )
-        return out.astype(q.dtype)
-    raise ValueError(f"unknown impl: {impl}")
+    Compatibility wrapper over ``repro.attention.nsa_attention`` — ``impl``
+    accepts the legacy aliases ("sparse"/"kernel"/"reference") as well as
+    any registered backend name or "auto".
+    """
+    from repro import attention as uattn  # lazy: avoids an import cycle
+
+    return uattn.nsa_attention(params, gates, q, k, v, cfg=cfg, mode="train",
+                               backend=impl, q_chunk=q_chunk)

@@ -1,5 +1,11 @@
 """NSA / FSA hyper-parameter bundle.
 
+``NSAConfig`` carries the *algorithm* hyper-parameters of NSA (what is
+computed); ``KernelPolicy`` carries the *implementation* bundle (which
+registered ``repro.attention`` backend runs each mode, plus kernel tuning
+knobs).  The two are deliberately separate: changing the policy must never
+change the math.
+
 Notation follows the paper (Table 1):
   N       sequence length
   d_K/d_V head dims (uniform d in practice)
@@ -8,15 +14,49 @@ Notation follows the paper (Table 1):
   T       number of selected KV blocks per query token (``num_selected``)
   B_K     KV block size (``block_size``)
   B_Q     FSA query-batch (query-block) size (``q_block_size``)
+
+Deprecated spellings (one release of warnings, mapped onto the policy):
+  NSAConfig(kernel="fsa")          -> policy=KernelPolicy(backend="fsa")
+  NSAConfig(selected_impl="union") -> policy=KernelPolicy(backend="sparse_union")
+  NSAConfig(paged_kernel=True)     -> policy=KernelPolicy(paged_backend="paged_kernel")
 """
 from __future__ import annotations
 
 import dataclasses
+import warnings
 
 
 @dataclasses.dataclass(frozen=True)
+class KernelPolicy:
+    """Implementation bundle: which ``repro.attention`` backend runs each
+    mode, plus kernel tuning knobs.  Swapping policies never changes the
+    computed function — only how (and how fast) it is computed.
+
+    ``"auto"`` defers the choice to ``repro.attention.resolve``, which picks
+    the best *capable* backend for the request's shape/mode/platform.
+    """
+
+    backend: str = "auto"          # train/prefill backend (registry name)
+    decode_backend: str = "auto"   # dense-cache decode backend
+    paged_backend: str = "auto"    # paged-decode (serving) backend
+
+    # --- kernel tuning knobs ---
+    q_block_size: int = 128        # B_Q: query tokens per FSA batch (MXU M dim)
+    interpret: bool = True         # Pallas interpret mode (no TPU in container)
+    # slots folded per M block in the paged-decode kernel (0 = auto: fill the
+    # MXU M dim to >= 8 rows)
+    paged_slot_block: int = 0
+
+
+# deprecated NSAConfig(selected_impl=...) values -> registry backend names
+# (public: repro.attention.api derives its legacy-alias table from this)
+SELECTED_IMPL_TO_BACKEND = {"union": "sparse_union", "gather": "sparse_gather"}
+
+
+@dataclasses.dataclass(frozen=True, init=False)
 class NSAConfig:
-    """Hyper-parameters of the NSA sparse-attention algorithm + FSA kernel knobs."""
+    """Hyper-parameters of the NSA sparse-attention algorithm + the
+    ``KernelPolicy`` implementation bundle (see module docstring)."""
 
     # --- NSA algorithm hyper-parameters (paper defaults: B_K=64, T=16) ---
     block_size: int = 64          # B_K: tokens per selected KV block
@@ -27,31 +67,110 @@ class NSAConfig:
     num_init_blocks: int = 1      # forced-selected initial blocks
     num_local_blocks: int = 2     # forced-selected local (trailing) blocks
 
-    # --- FSA kernel knobs (TPU) ---
-    q_block_size: int = 128       # B_Q: query tokens per FSA batch (MXU M dim)
-    kernel: str = "fsa"           # fsa | fsa_faithful | nsa | reference
-    interpret: bool = True        # Pallas interpret mode (no TPU in container)
-
-    # --- paged-decode (serving) kernel knobs ---
-    # paged_kernel picks the batched decode implementation on paged storage:
-    # True -> the Pallas kernel in kernels/paged_decode.py (slots folded into
-    # the MXU M dim, kv index_map composed through the page table);
-    # False -> the vmapped gather reference.  paged_slot_block is the number
-    # of slots folded per M block (0 = auto: fill M to >= 8 rows).
-    paged_kernel: bool = True
-    paged_slot_block: int = 0
-
-    # --- sparse (XLA) path strategy for the selected branch ---
-    # "union":  FSA organization in XLA ops — per query chunk, gather the
-    #           union of selected KV blocks ONCE and mask (block-batched,
-    #           like the kernel).  Production default.
-    # "gather": naive per-token gather of T blocks (each token re-fetches its
-    #           blocks) — the vanilla-NSA-style baseline for §Perf.
-    selected_impl: str = "union"
-
     # --- branch toggles (full-attention fallback for short sequences) ---
     min_seq_for_sparse: int = 256  # below this, dense attention is used
 
+    # --- implementation bundle (backends + kernel knobs) ---
+    policy: KernelPolicy = dataclasses.field(default_factory=KernelPolicy)
+
+    def __init__(self, block_size: int = 64, num_selected: int = 16,
+                 cmp_block_size: int = 32, cmp_stride: int = 16,
+                 window_size: int = 512, num_init_blocks: int = 1,
+                 num_local_blocks: int = 2, min_seq_for_sparse: int = 256,
+                 policy: KernelPolicy | None = None,
+                 # policy passthroughs (current spellings, no warning)
+                 q_block_size: int | None = None, interpret: bool | None = None,
+                 paged_slot_block: int | None = None,
+                 # deprecated spellings (one release of warnings)
+                 kernel: str | None = None, selected_impl: str | None = None,
+                 paged_kernel: bool | None = None):
+        for name, val in (("block_size", block_size),
+                          ("num_selected", num_selected),
+                          ("cmp_block_size", cmp_block_size),
+                          ("cmp_stride", cmp_stride),
+                          ("window_size", window_size),
+                          ("num_init_blocks", num_init_blocks),
+                          ("num_local_blocks", num_local_blocks),
+                          ("min_seq_for_sparse", min_seq_for_sparse)):
+            object.__setattr__(self, name, val)
+
+        policy = policy if policy is not None else KernelPolicy()
+        over = {}
+        if q_block_size is not None:
+            over["q_block_size"] = q_block_size
+        if interpret is not None:
+            over["interpret"] = interpret
+        if paged_slot_block is not None:
+            over["paged_slot_block"] = paged_slot_block
+        if kernel is not None and selected_impl is not None:
+            # historically independent axes (kernel path vs sparse path);
+            # both map onto the single policy.backend slot now, so a silent
+            # winner would mis-translate the config
+            raise ValueError(
+                "NSAConfig got both deprecated kernel= and selected_impl=; "
+                "they map onto the single KernelPolicy.backend — pass "
+                "policy=KernelPolicy(backend=...) with the one you mean")
+        if selected_impl is not None:
+            warnings.warn(
+                "NSAConfig(selected_impl=...) is deprecated; use "
+                "policy=KernelPolicy(backend='sparse_union'|'sparse_gather')",
+                DeprecationWarning, stacklevel=2)
+            over["backend"] = SELECTED_IMPL_TO_BACKEND[selected_impl]
+        if kernel is not None:
+            warnings.warn(
+                "NSAConfig(kernel=...) is deprecated; use "
+                "policy=KernelPolicy(backend=<registry name>)",
+                DeprecationWarning, stacklevel=2)
+            over["backend"] = kernel    # names coincide with registry names
+        if paged_kernel is not None:
+            warnings.warn(
+                "NSAConfig(paged_kernel=...) is deprecated; use "
+                "policy=KernelPolicy(paged_backend="
+                "'paged_kernel'|'paged_gather')",
+                DeprecationWarning, stacklevel=2)
+            over["paged_backend"] = ("paged_kernel" if paged_kernel
+                                     else "paged_gather")
+        if over:
+            policy = dataclasses.replace(policy, **over)
+        object.__setattr__(self, "policy", policy)
+
+    # ---------------------------------------------- policy view (no warning)
+    # Tuning knobs read pervasively by the kernels; kept as plain forwarding
+    # properties so call sites stay `cfg.q_block_size` / `cfg.interpret`.
+    @property
+    def q_block_size(self) -> int:
+        return self.policy.q_block_size
+
+    @property
+    def interpret(self) -> bool:
+        return self.policy.interpret
+
+    @property
+    def paged_slot_block(self) -> int:
+        return self.policy.paged_slot_block
+
+    # ------------------------------------------ deprecated views (warning)
+    @property
+    def kernel(self) -> str:
+        warnings.warn("NSAConfig.kernel is deprecated; read "
+                      "cfg.policy.backend", DeprecationWarning, stacklevel=2)
+        return self.policy.backend
+
+    @property
+    def selected_impl(self) -> str:
+        warnings.warn("NSAConfig.selected_impl is deprecated; read "
+                      "cfg.policy.backend", DeprecationWarning, stacklevel=2)
+        back = {v: k for k, v in SELECTED_IMPL_TO_BACKEND.items()}
+        return back.get(self.policy.backend, self.policy.backend)
+
+    @property
+    def paged_kernel(self) -> bool:
+        warnings.warn("NSAConfig.paged_kernel is deprecated; read "
+                      "cfg.policy.paged_backend", DeprecationWarning,
+                      stacklevel=2)
+        return self.policy.paged_backend != "paged_gather"
+
+    # ------------------------------------------------------------- derived
     def num_kv_blocks(self, seq_len: int) -> int:
         return max(1, (seq_len + self.block_size - 1) // self.block_size)
 

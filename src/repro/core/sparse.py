@@ -120,7 +120,8 @@ def selected_union_attention(q, k, v, idx, valid, cfg: NSAConfig, q_pos=None):
     Backward is a custom VJP: dK/dV are produced by a *per-KV-head-sharded*
     scatter-add (the FSA reduction step) — without it XLA all-gathers the
     full (B,S,h_K,d) f32 cotangent buffer once per chunk (measured 4.4e12
-    B/dev on codeqwen train_4k; see EXPERIMENTS.md §Perf iteration 2).
+    B/dev on codeqwen train_4k; see README "Layout" and the perf notes in
+    the git history of this module).
 
     q: (C, h, d); k/v: (S, h_k, d); idx/valid: (C, h_k, T); q_pos: (C,).
     """
@@ -197,8 +198,16 @@ def sliding_window_chunk(q, k, v, start, cfg: NSAConfig, q_pos):
     return _gqa_out(probs, v_win).astype(q.dtype)
 
 
-def _nsa_chunk(params, cfg, k, v, k_cmp, v_cmp, sel_map, chunk):
-    """Process one query chunk. chunk = (q_c, gates_c, pos_c)."""
+def _nsa_chunk(params, cfg, k, v, k_cmp, v_cmp, sel_map, chunk,
+               selected_fn=None):
+    """Process one query chunk. chunk = (q_c, gates_c, pos_c).
+
+    ``selected_fn(q_c, k, v, idx, valid, cfg, pos_c)`` is the selected-branch
+    organization — ``selected_union_attention`` (FSA block-union, the
+    production default) or ``selected_gather_attention`` (naive per-token
+    gather baseline).  The ``repro.attention`` registry passes it; there is
+    no string dispatch here.
+    """
     q_c, gates_c, pos_c = chunk
     n = k.shape[0]
     g = q_c.shape[1] // k.shape[1]
@@ -212,11 +221,10 @@ def _nsa_chunk(params, cfg, k, v, k_cmp, v_cmp, sel_map, chunk):
     scores = selection.importance_scores(p_cmp, sel_map, g)
     idx, valid = selection.select_blocks(scores, pos_c, cfg, n)
 
-    # --- selected branch: FSA block-union (production) or naive gather ---
-    if cfg.selected_impl == "union":
-        out_sel = selected_union_attention(q_c, k, v, idx, valid, cfg, pos_c)
-    else:
-        out_sel = selected_gather_attention(q_c, k, v, idx, valid, cfg, pos_c)
+    # --- selected branch (FSA block-union unless the caller overrides) ---
+    if selected_fn is None:
+        selected_fn = selected_union_attention
+    out_sel = selected_fn(q_c, k, v, idx, valid, cfg, pos_c)
 
     # --- sliding branch ---
     out_win = sliding_window_chunk(q_c, k, v, pos_c[0] - (cfg.window_size - 1), cfg, pos_c)
@@ -240,8 +248,13 @@ def nsa_attention_sparse(
     *,
     q_chunk: int = 512,
     return_selection: bool = False,
+    selected_fn=None,
 ):
-    """Full NSA attention, sparse path. q: (N, h, d); gates: (N, h, 3)."""
+    """Full NSA attention, sparse path. q: (N, h, d); gates: (N, h, 3).
+
+    ``selected_fn`` picks the selected-branch organization (see
+    ``_nsa_chunk``); None means the FSA block-union production path.
+    """
     n, h, d = q.shape
     k_cmp, v_cmp = compression.compress_kv(params, k, v, cfg)
     sel_map = jnp.asarray(
@@ -256,7 +269,8 @@ def nsa_attention_sparse(
     n_pad = q.shape[0]
     pos = jnp.arange(n_pad)
 
-    body = functools.partial(_nsa_chunk, params, cfg, k, v, k_cmp, v_cmp, sel_map)
+    body = functools.partial(_nsa_chunk, params, cfg, k, v, k_cmp, v_cmp,
+                             sel_map, selected_fn=selected_fn)
     chunks = (
         q.reshape(n_pad // c, c, h, d),
         gates.reshape(n_pad // c, c, h, 3),

@@ -1,308 +1,102 @@
-"""Jit'd dispatch wrappers around the Pallas kernels.
+"""Compatibility facade over ``repro.attention`` (the unified dispatch API).
 
-``selected_attention`` is the public entry for the paper's bottleneck branch;
-``cfg.kernel`` picks the implementation:
+The kernel *implementations* live in this package (``fsa_selected``,
+``fsa_faithful``, ``nsa_selected``, ``flash_attention``, ``paged_decode``);
+the *dispatch* — which organization runs for which request — lives in
+``repro.attention`` (capability-based backend registry, see README
+"Attention API").  This module keeps the historical entry points working:
 
-  fsa           — FSA-TPU kernel (production; DESIGN.md §2)
-  fsa_faithful  — paper-structure three-kernel pipeline (ablation)
-  nsa           — vanilla-NSA-style baseline kernel (g padded to 8)
-  reference     — dense-mask oracle
+  selected_attention   — selected branch via the policy's Pallas kernel
+                         (fsa | fsa_faithful | nsa | reference)
+  full_attention / sliding_attention — Pallas flash wrappers
+  paged_decode_attention(_batched)   — paged serving decode; the deprecated
+                         ``use_kernel`` bool maps onto the ``paged_kernel``
+                         / ``paged_gather`` registry backends (one release
+                         of warnings)
 
 Forward runs the kernel; backward is a custom VJP through the sparse
-gather formulation (identical math, XLA-differentiable) — on-TPU backward
-kernels are a recorded extension (EXPERIMENTS.md §Perf).
+gather formulation (identical math, XLA-differentiable) via the shared
+scaffolding in ``repro.attention.vjp`` — on-TPU backward kernels are a
+recorded extension (see ROADMAP.md "Open items").
 """
 from __future__ import annotations
 
-import functools
+import warnings
 
-import jax
-import jax.numpy as jnp
-
-from repro.core import indexing, sparse
-from repro.core.paging import gather_rows
 from repro.core.nsa_config import NSAConfig
-from repro.kernels import flash_attention as _flash
-from repro.kernels import fsa_faithful as _faithful
-from repro.kernels import fsa_selected as _fsa
-from repro.kernels import nsa_selected as _nsa
-from repro.kernels import paged_decode as _paged
-from repro.kernels import ref as _ref
 
 
-def _pad_tokens(x, n_pad):
-    return jnp.pad(x, ((0, n_pad - x.shape[0]),) + ((0, 0),) * (x.ndim - 1))
-
-
-def _selected_fwd_impl(q, k, v, idx, valid, cfg: NSAConfig):
-    n, h, d = q.shape
-    h_k = k.shape[1]
-    g = h // h_k
-    bq = min(cfg.q_block_size, max(8, n))
-    n_pad = ((n + bq - 1) // bq) * bq
-
-    qp = _pad_tokens(q, n_pad)
-    idxp = _pad_tokens(idx, n_pad)
-    validp = _pad_tokens(valid, n_pad)
-    # normalize: ascending sort, duplicates invalidated (top-k selection never
-    # produces dups, but the kernel contract must not depend on that)
-    key = jnp.where(validp, idxp, jnp.iinfo(jnp.int32).max // 2)
-    order = jnp.argsort(key, axis=-1)
-    idxp = jnp.take_along_axis(idxp, order, axis=-1)
-    validp = jnp.take_along_axis(validp, order, axis=-1)
-    dup = jnp.concatenate(
-        [jnp.zeros_like(validp[..., :1]),
-         (idxp[..., 1:] == idxp[..., :-1]) & validp[..., 1:] & validp[..., :-1]],
-        axis=-1)
-    validp &= ~dup
-    sel = jnp.where(validp, idxp, -1).astype(jnp.int32)       # (N, h_K, T)
-    # rows layout for sel: repeat each token's list over the g group heads
-    sel_rows = jnp.repeat(sel.transpose(1, 0, 2), g, axis=1)  # (h_K, N·g, T)
-    q_rows = _ref.rows_from_heads(qp, h_k)
-    k_t = k.transpose(1, 0, 2)
-    v_t = v.transpose(1, 0, 2)
-
-    if cfg.kernel == "nsa":
-        g_pad = max(g, 8)
-        q_pad = qp.reshape(n_pad, h_k, g, d).transpose(1, 0, 2, 3)
-        q_pad = jnp.pad(q_pad, ((0, 0), (0, 0), (0, g_pad - g), (0, 0)))
-        o = _nsa.nsa_selected(q_pad, k_t, v_t, sel.transpose(1, 0, 2),
-                              block_k=cfg.block_size, interpret=cfg.interpret)
-        o = o[:, :, :g].transpose(1, 0, 2, 3).reshape(n_pad, h, -1)
-        return o[:n]
-
-    kv_ids, kv_cnt = indexing.build_qblock_union(idxp, validp, cfg, k.shape[0])
-    if cfg.kernel == "fsa":
-        o_rows = _fsa.fsa_selected(q_rows, k_t, v_t, sel_rows, kv_ids, kv_cnt,
-                                   g=g, block_q=bq, block_k=cfg.block_size,
-                                   interpret=cfg.interpret)
-    elif cfg.kernel == "fsa_faithful":
-        q_ids, slot_ids, q_cnt = indexing.build_kvblock_qlists(
-            idxp, validp, cfg, k.shape[0], union_cap=kv_ids.shape[-1])
-        o_rows = _faithful.fsa_faithful(q_rows, k_t, v_t, sel_rows, kv_ids,
-                                        kv_cnt, q_ids, slot_ids, q_cnt, g=g,
-                                        block_q=bq, block_k=cfg.block_size,
-                                        interpret=cfg.interpret)
-    elif cfg.kernel == "reference":
-        return _ref.selected_ref(q, k, v, idx, valid, cfg)
-    else:
-        raise ValueError(f"unknown kernel: {cfg.kernel}")
-    return _ref.heads_from_rows(o_rows, n_pad)[:n]
-
-
-def _selected_sparse(q, k, v, idx, valid, cfg: NSAConfig):
-    """Differentiable twin of the kernel (chunked gather path)."""
-    n = q.shape[0]
-    c = min(512, n)
-    pad = (c - n % c) % c
-    qp, idxp, validp = (_pad_tokens(a, n + pad) for a in (q, idx, valid))
-
-    def body(args):
-        q_c, i_c, v_c, pos_c = args
-        return sparse.selected_gather_attention(q_c, k, v, i_c, v_c, cfg, pos_c)
-
-    nc = (n + pad) // c
-    out = jax.lax.map(body, (qp.reshape(nc, c, *q.shape[1:]),
-                             idxp.reshape(nc, c, *idx.shape[1:]),
-                             validp.reshape(nc, c, *valid.shape[1:]),
-                             jnp.arange(n + pad).reshape(nc, c)))
-    return out.reshape(n + pad, q.shape[1], -1)[:n]
-
-
-@functools.partial(jax.custom_vjp, nondiff_argnums=(5,))
 def selected_attention(q, k, v, idx, valid, cfg: NSAConfig):
-    """Selected-branch attention. q: (N,h,d), k/v: (S,h_K,d), idx/valid: (N,h_K,T)."""
-    return _selected_fwd_impl(q, k, v, idx, valid, cfg)
+    """Selected-branch attention. q: (N,h,d), k/v: (S,h_K,d), idx/valid:
+    (N,h_K,T).  The Pallas kernel is picked by ``cfg.policy.backend``."""
+    from repro import attention as uattn
 
-
-def _sel_fwd(q, k, v, idx, valid, cfg):
-    return _selected_fwd_impl(q, k, v, idx, valid, cfg), (q, k, v, idx, valid)
-
-
-def _sel_bwd(cfg, res, dout):
-    q, k, v, idx, valid = res
-    _, vjp = jax.vjp(lambda q_, k_, v_: _selected_sparse(q_, k_, v_, idx, valid, cfg),
-                     q, k, v)
-    dq, dk, dv = vjp(dout)
-    zi = jnp.zeros(idx.shape, jax.dtypes.float0)
-    zv = jnp.zeros(valid.shape, jax.dtypes.float0)
-    return dq, dk, dv, zi, zv
-
-
-selected_attention.defvjp(_sel_fwd, _sel_bwd)
-
-
-def _flash_fwd_impl(q, k, v, cfg: NSAConfig, causal, window):
-    n, h, d = q.shape
-    h_k = k.shape[1]
-    g = h // h_k
-    bq = min(cfg.q_block_size, max(8, n))
-    n_pad = ((n + bq - 1) // bq) * bq
-    q_rows = _ref.rows_from_heads(_pad_tokens(q, n_pad), h_k)
-    o_rows = _flash.flash_attention(
-        q_rows, k.transpose(1, 0, 2), v.transpose(1, 0, 2), g=g, causal=causal,
-        window=window, block_q=bq, block_k=min(128, k.shape[0]),
-        interpret=cfg.interpret)
-    return _ref.heads_from_rows(o_rows, n_pad)[:n]
-
-
-@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5))
-def _flash_op(q, k, v, cfg, causal, window):
-    return _flash_fwd_impl(q, k, v, cfg, causal, window)
-
-
-def _flash_fwd(q, k, v, cfg, causal, window):
-    return _flash_fwd_impl(q, k, v, cfg, causal, window), (q, k, v)
-
-
-def _flash_bwd(cfg, causal, window, res, dout):
-    q, k, v = res
-    _, vjp = jax.vjp(
-        lambda q_, k_, v_: _ref.flash_ref_chunked(q_, k_, v_, causal=causal,
-                                                  window=window), q, k, v)
-    return vjp(dout)
-
-
-_flash_op.defvjp(_flash_fwd, _flash_bwd)
-
-
-def _paged_sel_win_ref(q, k_pages, v_pages, page_table, idx, valid, pos,
-                       cfg: NSAConfig):
-    """Gather-through-page-table reference for ONE slot's selected + sliding
-    branches.  q: (h, d); idx/valid: (h_k, T); pos: scalar.
-    Returns (out_sel, out_win): each (h, dv) float32.
-    """
-    from repro.core.reference import _gqa_out, _gqa_scores, _safe_softmax
-
-    h, d = q.shape
-    p_sz, h_k = k_pages.shape[1], k_pages.shape[2]
-    g = h // h_k
-
-    # --- selected branch: gather exactly the T physical pages per KV head
-    #     (each head pulls only its own rows of its own pages) ---
-    t = idx.shape[-1]
-    phys = page_table[idx]                                  # (h_k, T)
-    hk_i = jnp.arange(h_k)
-    k_sel = jax.vmap(lambda ph, i: k_pages[ph, :, i])(phys, hk_i)
-    v_sel = jax.vmap(lambda ph, i: v_pages[ph, :, i])(phys, hk_i)
-    k_sel = k_sel.reshape(h_k, t * p_sz, d)                 # (h_k, T·P, d)
-    v_sel = v_sel.reshape(h_k, t * p_sz, -1)
-    tok_pos = (idx[..., None] * p_sz + jnp.arange(p_sz)).reshape(h_k, t * p_sz)
-    sel_mask = jnp.repeat(valid, p_sz, axis=-1) & (tok_pos <= pos)
-    qg = q.reshape(h_k, g, d).astype(jnp.float32)
-    s_sel = jnp.einsum("kgd,ksd->kgs", qg, k_sel.astype(jnp.float32))
-    s_sel = s_sel / jnp.sqrt(d).astype(jnp.float32)
-    p_sel, _ = _safe_softmax(s_sel, sel_mask[:, None, :])
-    out_sel = jnp.einsum("kgs,ksd->kgd", p_sel, v_sel.astype(jnp.float32))
-
-    # --- sliding branch: the trailing window through the page table ---
-    w = cfg.window_size
-    win_rows = pos - (w - 1) + jnp.arange(w)
-    k_win = gather_rows(k_pages, page_table, win_rows)      # (W, h_k, d)
-    v_win = gather_rows(v_pages, page_table, win_rows)
-    win_mask = (win_rows >= 0) & (win_rows <= pos)
-    p_win, _ = _safe_softmax(_gqa_scores(q[None], k_win),
-                             win_mask[None, None, :])
-    out_win = _gqa_out(p_win, v_win)[0]
-    return out_sel.reshape(h, -1), out_win
-
-
-def paged_decode_attention_batched(gates, q, k_pages, v_pages, page_tables,
-                                   cmp_k, cmp_v, pos, cfg: NSAConfig, *,
-                                   use_kernel: bool = False,
-                                   block_s: int | None = None):
-    """Batched multi-slot NSA decode reading KV through per-slot page tables —
-    touches ONLY the pages the three branches address (page size == B_K, so
-    one selected block is one physical page):
-
-      compressed  all compressed-token rows (already gathered views — they
-                  are O(N/stride) small)
-      selected    the T pages named by ``page_table[idx]`` per slot
-      sliding     the trailing ceil(W/B_K)+1 pages per slot
-
-    gates: (B, h, 3); q: (B, h, d); k_pages/v_pages: (N_pages, P, h_k, d*);
-    page_tables: (B, max_pages) int32; cmp_k/cmp_v: (B, N_cmp_max, h_k, d*);
-    pos: (B,).  Returns (B, h, dv).
-
-    ``use_kernel=True`` runs the Pallas paged-decode kernel: ``fsa_selected``'s
-    BlockSpec pattern with the kv index_map composed through the page table
-    (ids -> page_table[ids]) and B slots folded into the matmul M dimension —
-    one launch per engine tick.  ``use_kernel=False`` is the gather reference
-    (still a single batched dispatch, vmapped over slots).  The compressed
-    prologue is shared with the dense-cache decode via
-    ``sparse.decode_cmp_and_select`` on both paths.
-    """
-    b, h, d = q.shape
-    p_sz, h_k = k_pages.shape[1], k_pages.shape[2]
-    assert p_sz == cfg.block_size, "page size must equal the NSA block size"
-    g = h // h_k
-    s_max = page_tables.shape[1] * p_sz
-
-    # --- compressed branch + top-T selection (shared with the dense path;
-    #     logical block id == page-table index) ---
-    out_cmp, idx, valid = jax.vmap(
-        lambda q1, ck, cv, p1: sparse.decode_cmp_and_select(
-            q1[None], ck, cv, p1, cfg, s_max))(q, cmp_k, cmp_v, pos)
-    out_cmp = out_cmp[:, 0]                                  # (B, h, dv)
-    idx, valid = idx[:, 0], valid[:, 0]                      # (B, h_k, T)
-
-    if use_kernel:
-        bs = block_s or cfg.paged_slot_block or max(1, -(-8 // g))
-        bs = min(bs, b)
-        pad = (-b) % bs
-        if pad:
-            q_p = jnp.pad(q, ((0, pad), (0, 0), (0, 0)))
-            tables_p = jnp.pad(page_tables, ((0, pad), (0, 0)))
-            idx_p = jnp.pad(idx, ((0, pad), (0, 0), (0, 0)))
-            valid_p = jnp.pad(valid, ((0, pad), (0, 0), (0, 0)))
-            pos_p = jnp.pad(pos, ((0, pad),))
-        else:
-            q_p, tables_p, idx_p, valid_p, pos_p = (q, page_tables, idx,
-                                                    valid, pos)
-        bp = b + pad
-        pages, blks = _paged.build_decode_steps(
-            idx_p, valid_p, tables_p, pos_p, window=cfg.window_size,
-            page_size=p_sz, block_s=bs)
-        q_rows = (q_p.reshape(bp, h_k, g, d).transpose(1, 0, 2, 3)
-                     .reshape(h_k, bp * g, d))
-        o_sel, o_win = _paged.paged_decode(
-            q_rows, k_pages, v_pages, pages, blks, pos_p.astype(jnp.int32),
-            g=g, block_s=bs, num_sel=idx.shape[-1], window=cfg.window_size,
-            interpret=cfg.interpret)
-        dv = o_sel.shape[-1]
-        unfold = lambda o: (o.reshape(h_k, bp, g, dv).transpose(1, 0, 2, 3)
-                             .reshape(bp, h, dv)[:b])
-        out_sel, out_win = unfold(o_sel), unfold(o_win)
-    else:
-        out_sel, out_win = jax.vmap(
-            lambda q1, tb, i1, v1, p1: _paged_sel_win_ref(
-                q1, k_pages, v_pages, tb, i1, v1, p1, cfg))(
-                    q, page_tables, idx, valid, pos)
-
-    gf = gates.astype(jnp.float32)
-    out = (gf[..., 0:1] * out_cmp.astype(jnp.float32)
-           + gf[..., 1:2] * out_sel
-           + gf[..., 2:3] * out_win)
-    return out.astype(q.dtype)
-
-
-def paged_decode_attention(gates, q, k_pages, v_pages, page_table,
-                           cmp_k, cmp_v, pos, cfg: NSAConfig, *,
-                           use_kernel: bool = False):
-    """One-token (single-slot) NSA paged decode; see
-    ``paged_decode_attention_batched`` for the semantics.  q: (h, d);
-    page_table: (max_pages,); cmp_k/cmp_v: (N_cmp_max, h_k, d*); pos: scalar.
-    """
-    return paged_decode_attention_batched(
-        gates[None], q[None], k_pages, v_pages, page_table[None],
-        cmp_k[None], cmp_v[None], pos[None], cfg, use_kernel=use_kernel)[0]
+    return uattn.selected_attention(q, k, v, idx, valid, cfg)
 
 
 def full_attention(q, k, v, cfg: NSAConfig, *, causal: bool = True):
     """Flash full attention. q: (N,h,d), k/v: (S,h_K,d)."""
-    return _flash_op(q, k, v, cfg, causal, None)
+    from repro import attention as uattn
+
+    return uattn.flash_attention(q, k, v, cfg, causal=causal, window=None)
 
 
 def sliding_attention(q, k, v, window: int, cfg: NSAConfig):
     """Flash sliding-window attention (causal)."""
-    return _flash_op(q, k, v, cfg, True, window)
+    from repro import attention as uattn
+
+    return uattn.flash_attention(q, k, v, cfg, causal=True, window=window)
+
+
+def _paged_backend_name(cfg: NSAConfig, use_kernel, backend) -> str:
+    if use_kernel is not None:
+        if backend is not None:
+            raise ValueError("pass either backend= or the deprecated "
+                             "use_kernel bool, not both")
+        warnings.warn(
+            "the use_kernel bool of paged_decode_attention is deprecated; "
+            "pass backend='paged_kernel'|'paged_gather' (or set "
+            "KernelPolicy.paged_backend)", DeprecationWarning, stacklevel=3)
+        return "paged_kernel" if use_kernel else "paged_gather"
+    if backend is not None:
+        return backend
+    # historical default of this wrapper: the gather reference
+    return "paged_gather"
+
+
+def paged_decode_attention_batched(gates, q, k_pages, v_pages, page_tables,
+                                   cmp_k, cmp_v, pos, cfg: NSAConfig, *,
+                                   use_kernel: bool | None = None,
+                                   backend: str | None = None,
+                                   block_s: int | None = None):
+    """Batched multi-slot NSA paged decode (compat wrapper; see
+    ``repro.attention.backends.paged_decode_attention`` for the semantics).
+
+    gates: (B, h, 3); q: (B, h, d); k_pages/v_pages: (N_pages, P, h_k, d*);
+    page_tables: (B, max_pages) int32; cmp_k/cmp_v: (B, N_cmp_max, h_k, d*);
+    pos: (B,).  Returns (B, h, dv).
+    """
+    from repro import attention as uattn
+
+    name = _paged_backend_name(cfg, use_kernel, backend)
+    cache = {"page_tables": page_tables, "cmp_k": cmp_k, "cmp_v": cmp_v,
+             "pos": pos}
+    return uattn.nsa_attention(None, gates, q, k_pages, v_pages, cache,
+                               cfg=cfg, mode="paged_decode", backend=name,
+                               block_s=block_s)
+
+
+def paged_decode_attention(gates, q, k_pages, v_pages, page_table,
+                           cmp_k, cmp_v, pos, cfg: NSAConfig, *,
+                           use_kernel: bool | None = None,
+                           backend: str | None = None,
+                           block_s: int | None = None):
+    """One-token (single-slot) NSA paged decode; see
+    ``paged_decode_attention_batched`` for the semantics.  q: (h, d);
+    page_table: (max_pages,); cmp_k/cmp_v: (N_cmp_max, h_k, d*); pos: scalar.
+    """
+    name = _paged_backend_name(cfg, use_kernel, backend)
+    return paged_decode_attention_batched(
+        gates[None], q[None], k_pages, v_pages, page_table[None],
+        cmp_k[None], cmp_v[None], pos[None], cfg, backend=name,
+        block_s=block_s)[0]

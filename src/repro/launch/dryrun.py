@@ -176,7 +176,9 @@ def main():
     ap.add_argument("--mesh", default="pod", choices=["pod", "multipod", "both"])
     ap.add_argument("--all", action="store_true")
     ap.add_argument("--attn-impl", default=None,
-                    help="override cfg.attn_impl (perf experiments)")
+                    help="override cfg.attn_impl: 'auto' or any "
+                         "repro.attention registry backend name (legacy "
+                         "'sparse'/'kernel' aliases still resolve)")
     ap.add_argument("--q-chunk", type=int, default=None)
     ap.add_argument("--set", action="append", default=[],
                     help="generic ModelConfig override key=value (python "

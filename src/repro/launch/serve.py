@@ -38,13 +38,15 @@ class Engine:
     """Back-compat facade: paged continuous batching for attention families,
     dense equal-length loop for recurrent/encdec families."""
 
-    def __init__(self, cfg, batch_slots: int, max_len: int, mesh=None):
+    def __init__(self, cfg, batch_slots: int, max_len: int, mesh=None,
+                 backend: str | None = None):
         self.cfg = cfg
         self.batch_slots = batch_slots
         self.max_len = max_len
         self.paged = cfg.family in SUPPORTED_FAMILIES
         if self.paged:
-            self._eng = PagedEngine(cfg, n_slots=batch_slots, max_len=max_len)
+            self._eng = PagedEngine(cfg, n_slots=batch_slots, max_len=max_len,
+                                    backend=backend)
         else:
             self.model = build(cfg)
             self.params = self.model.init(jax.random.PRNGKey(0))
@@ -127,13 +129,17 @@ def main():
     ap.add_argument("--new-tokens", type=int, default=16)
     ap.add_argument("--requests", type=int, default=0,
                     help="total requests (default: 2x slots)")
+    ap.add_argument("--backend", default=None,
+                    help="paged-decode backend (repro.attention registry "
+                         "name, e.g. paged_kernel | paged_gather)")
     ap.add_argument("--reduced", action="store_true")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
     if args.reduced:
         cfg = reduced(cfg)
-    eng = Engine(cfg, args.slots, args.prompt_len + args.new_tokens + 8)
+    eng = Engine(cfg, args.slots, args.prompt_len + args.new_tokens + 8,
+                 backend=args.backend)
     # dense fallback families decode one fixed batch: one request per slot
     n_req = (args.requests or 2 * args.slots) if eng.paged else args.slots
     rng = np.random.default_rng(0)

@@ -8,8 +8,12 @@ RoPE part, v = latent), and the per-head value up-projection W_uv is applied
 to the attention output.  This is mathematically identical to materialising
 the 16 KV heads (associativity of the matmuls) and lets NSA's compression /
 selection / sliding machinery — and the FSA kernels — operate on the latent
-cache directly, which is also the correct decode-time layout.  See DESIGN.md
-§Arch-applicability.
+cache directly, which is also the correct decode-time layout.  (See the
+model-zoo applicability notes in README "Layout" / ROADMAP.md.)
+
+All attention math dispatches through ``repro.attention.nsa_attention``
+(the capability-based backend registry); this layer only does projections,
+caches and sharding.
 
 Decode keeps a raw KV cache plus incrementally-updated NSA compression
 caches, so per-token cost stays O(N/stride + T·B_K + W).
@@ -21,7 +25,7 @@ import dataclasses
 import jax
 import jax.numpy as jnp
 
-from repro.core import attention as core_attn
+from repro import attention as uattn
 from repro.core.paging import gather_rows, scatter_rows
 from repro.core import compression, gating, sparse
 from repro.models.layers import apply_rope, dense_init, rms_norm
@@ -112,19 +116,19 @@ def attention_forward(p, x, cfg, *, causal: bool = True):
 
     if cfg.attention == "nsa" and causal:
         gates = gating.apply_gates(p["nsa"], x)
-        fn = lambda q1, k1, v1, g1: core_attn.nsa_attention(
-            p["nsa"], g1, q1, k1, v1, cfg.nsa, impl=cfg.attn_impl,
-            q_chunk=cfg.q_chunk)
+        fn = lambda q1, k1, v1, g1: uattn.nsa_attention(
+            p["nsa"], g1, q1, k1, v1, cfg=cfg.nsa, mode="train",
+            backend=cfg.attn_impl, q_chunk=cfg.q_chunk)
         o = jax.vmap(fn)(q, k, v, gates)
     elif cfg.attention == "swa" and causal:
-        from repro.kernels import ref as kref
-        fn = lambda q1, k1, v1: kref.flash_ref_chunked(
-            q1, k1, v1, causal=True, window=cfg.swa_window, q_chunk=cfg.q_chunk)
+        fn = lambda q1, k1, v1: uattn.nsa_attention(
+            None, None, q1, k1, v1, cfg=cfg.nsa, mode="train",
+            algorithm="sliding", window=cfg.swa_window, q_chunk=cfg.q_chunk)
         o = jax.vmap(fn)(q, k, v)
     else:
-        from repro.kernels import ref as kref
-        fn = lambda q1, k1, v1: kref.flash_ref_chunked(
-            q1, k1, v1, causal=causal, q_chunk=cfg.q_chunk)
+        fn = lambda q1, k1, v1: uattn.nsa_attention(
+            None, None, q1, k1, v1, cfg=cfg.nsa, mode="train",
+            algorithm="full", causal=causal, q_chunk=cfg.q_chunk)
         o = jax.vmap(fn)(q, k, v)
     o = shard(o, "batch", "seq", "heads")
     return _out_proj(p, o, cfg)
@@ -138,9 +142,9 @@ def cross_attention_forward(p, x, kv_x, cfg):
     q = (x @ p["w_q"]).reshape(b, s, h, hd)
     k = (kv_x @ p["w_k"]).reshape(b, kv_x.shape[1], hk, hd)
     v = (kv_x @ p["w_v"]).reshape(b, kv_x.shape[1], hk, hd)
-    from repro.kernels import ref as kref
-    o = jax.vmap(lambda a, b_, c: kref.flash_ref_chunked(a, b_, c, causal=False,
-                                                         q_chunk=cfg.q_chunk))(q, k, v)
+    o = jax.vmap(lambda a, b_, c: uattn.nsa_attention(
+        None, None, a, b_, c, cfg=cfg.nsa, mode="prefill", algorithm="full",
+        causal=False, q_chunk=cfg.q_chunk))(q, k, v)
     return o.reshape(b, s, -1) @ p["w_o"]
 
 
@@ -237,8 +241,9 @@ def attention_decode(p, x_t, cache, pos, cfg):
     if cfg.attention == "nsa":
         cache = _update_cmp_cache(p, cfg, cache, pos)
         gates = gating.apply_gates(p["nsa"], x_t)        # (B,h,3)
-        fn = lambda q1, kc, vc, ck, cv, g1, p1: sparse.nsa_decode_step(
-            p["nsa"], g1, q1, kc, vc, ck, cv, p1, cfg.nsa)
+        fn = lambda q1, kc, vc, ck, cv, g1, p1: uattn.nsa_attention(
+            p["nsa"], g1, q1, kc, vc, {"cmp_k": ck, "cmp_v": cv, "pos": p1},
+            cfg=cfg.nsa, mode="decode")
         o = jax.vmap(fn)(q[:, 0], cache["k"], cache["v"],
                          cache["cmp_k"], cache["cmp_v"], gates, pos)
     else:
@@ -323,11 +328,10 @@ def paged_attention_decode(p, x_t, layer_cache, tables, pos, cfg):
 
     The NSA path reads only the pages its branches touch: compressed pages,
     the top-T selected pages (page == NSA block), and the sliding-window
-    pages — one batched dispatch via
-    ``kernels.ops.paged_decode_attention_batched`` (the Pallas paged-decode
-    kernel when ``cfg.nsa.paged_kernel``).
+    pages — one batched dispatch through ``repro.attention`` (the Pallas
+    paged-decode kernel unless ``cfg.nsa.policy.paged_backend`` says
+    otherwise).
     """
-    from repro.kernels import ops
     b = x_t.shape[0]
     pos = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (b,))
     q, k, v = _qkv(p, x_t[:, None, :], cfg, pos[:, None])
@@ -346,12 +350,14 @@ def paged_attention_decode(p, x_t, layer_cache, tables, pos, cfg):
             layer_cache["cmp_k_pages"], tables["cmp_table"], cmp_rows)
         cmp_v = jax.vmap(gather_rows, in_axes=(None, 0, None))(
             layer_cache["cmp_v_pages"], tables["cmp_table"], cmp_rows)
-        # one batched dispatch for the whole slot batch (the Pallas paged
-        # kernel when cfg.nsa.paged_kernel, else the vmapped gather reference)
-        o = ops.paged_decode_attention_batched(
-            gates, q[:, 0], layer_cache["k_pages"], layer_cache["v_pages"],
-            tables["page_table"], cmp_k, cmp_v, pos, cfg.nsa,
-            use_kernel=cfg.nsa.paged_kernel)
+        # one batched dispatch for the whole slot batch; the registry
+        # resolves cfg.nsa.policy.paged_backend ("auto" -> paged_kernel)
+        o = uattn.nsa_attention(
+            p["nsa"], gates, q[:, 0], layer_cache["k_pages"],
+            layer_cache["v_pages"],
+            {"page_tables": tables["page_table"], "cmp_k": cmp_k,
+             "cmp_v": cmp_v, "pos": pos},
+            cfg=cfg.nsa, mode="paged_decode")
     else:
         # full / swa reference: gather the visible span through the page table
         span = tables["page_table"].shape[1] * cfg.nsa.block_size
@@ -444,9 +450,11 @@ def paged_attention_prefill_chunks(p, x_c, layer_cache, tables, t0, length,
         gates = gating.apply_gates(p["nsa"], x_c)                  # (B,C,h,3)
         sel_map = jnp.asarray(compression.cmp_to_sel_map(
             n_cmp_max, nsa.num_kv_blocks(s_max), nsa))
+        sel_fn = uattn.sparse_selected_fn(nsa)   # honors policy union/gather
         o, _ = jax.vmap(
             lambda kv1, vv1, ck1, cv1, q1, g1, p1: sparse._nsa_chunk(
-                p["nsa"], nsa, kv1, vv1, ck1, cv1, sel_map, (q1, g1, p1)))(
+                p["nsa"], nsa, kv1, vv1, ck1, cv1, sel_map, (q1, g1, p1),
+                selected_fn=sel_fn))(
                     k_view, v_view, cmp_k, cmp_v, q, gates, pos_c)
     else:
         key_pos = jnp.arange(s_max)

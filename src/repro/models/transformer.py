@@ -7,6 +7,11 @@ blocks, reusing one set of shared-attention weights across groups.
 
 The LM loss is computed in sequence chunks so the (B, S, vocab) logits tensor
 is never materialised (vocab is TP-sharded).
+
+All attention math below the layer stack dispatches through the
+``repro.attention`` backend registry (``attention_layer`` passes
+``cfg.attn_impl`` / ``cfg.nsa.policy`` through); this module never names an
+implementation.
 """
 from __future__ import annotations
 
@@ -314,6 +319,8 @@ def lm_paged_decode_step(params, cache, tokens, pos, tables, cfg):
 
     tokens: (B,) int32; pos: (B,) per-slot absolute positions; tables: the
     shared {"page_table", "cmp_table"} arrays.  Returns (logits (B,V), cache).
+    The paged-decode backend (Pallas kernel vs gather reference) is resolved
+    per ``cfg.nsa.policy.paged_backend`` inside ``repro.attention``.
     """
     x = params["embed"][tokens]
 

@@ -17,6 +17,7 @@ from __future__ import annotations
 
 import dataclasses
 import time
+import warnings
 
 import numpy as np
 
@@ -35,15 +36,26 @@ class Engine:
 
     def __init__(self, cfg, n_slots: int = 4, max_len: int = 1024, *,
                  num_pages: int | None = None, prefill_chunk: int | None = None,
-                 params=None, seed: int = 0, use_kernel: bool | None = None,
+                 params=None, seed: int = 0, backend: str | None = None,
+                 use_kernel: bool | None = None,
                  admit_limit: int | None = None):
         if cfg.family not in SUPPORTED_FAMILIES:
             raise NotImplementedError(
                 f"paged serving supports families {SUPPORTED_FAMILIES}, got "
                 f"'{cfg.family}' (ssm/hybrid/encdec state is not paged KV)")
-        if use_kernel is not None:   # override cfg.nsa.paged_kernel
-            cfg = dataclasses.replace(
-                cfg, nsa=dataclasses.replace(cfg.nsa, paged_kernel=use_kernel))
+        if use_kernel is not None:   # deprecated spelling of backend=
+            if backend is not None:
+                raise ValueError("pass either backend= or the deprecated "
+                                 "use_kernel flag, not both")
+            warnings.warn(
+                "the use_kernel flag of Engine is deprecated; pass "
+                "backend='paged_kernel'|'paged_gather'", DeprecationWarning,
+                stacklevel=2)
+            backend = "paged_kernel" if use_kernel else "paged_gather"
+        if backend is not None:      # override cfg.nsa.policy.paged_backend
+            cfg = dataclasses.replace(cfg, nsa=dataclasses.replace(
+                cfg.nsa, policy=dataclasses.replace(
+                    cfg.nsa.policy, paged_backend=backend)))
         self.cfg = cfg
         self.model = build(cfg)
         self.params = (params if params is not None

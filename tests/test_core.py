@@ -96,11 +96,12 @@ def test_short_sequence_falls_back_to_reference():
 
 def test_union_selected_matches_reference(setup):
     """FSA block-union XLA path (production) == dense oracle."""
+    from repro.attention import nsa_attention as unified
     p, gates, q, k, v = setup
-    cfg_u = NSAConfig(**{**CFG.__dict__, "selected_impl": "union"})
-    cfg_g = NSAConfig(**{**CFG.__dict__, "selected_impl": "gather"})
     o_ref = nsa_attention_ref(p, gates, q, k, v, CFG)
-    o_u = nsa_attention_sparse(p, gates, q, k, v, cfg_u, q_chunk=64)
-    o_g = nsa_attention_sparse(p, gates, q, k, v, cfg_g, q_chunk=64)
+    o_u = unified(p, gates, q, k, v, cfg=CFG, mode="prefill",
+                  backend="sparse_union", q_chunk=64)
+    o_g = unified(p, gates, q, k, v, cfg=CFG, mode="prefill",
+                  backend="sparse_gather", q_chunk=64)
     np.testing.assert_allclose(o_u, o_ref, atol=2e-5, rtol=2e-5)
     np.testing.assert_allclose(o_g, o_ref, atol=2e-5, rtol=2e-5)

@@ -1,12 +1,15 @@
 """Kernel sweeps: every Pallas kernel vs its pure-jnp oracle (interpret mode).
 
 Sweeps shapes (incl. ragged N), dtypes, GQA group sizes, block sizes, dk!=dv.
+Kernels are addressed by registry name through
+``repro.attention.selected_attention(..., kernel=...)``.
 """
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro.attention import selected_attention
 from repro.core import NSAConfig
 from repro.core.selection import select_blocks
 from repro.kernels import ops, ref
@@ -36,8 +39,7 @@ KERNELS = ["fsa", "fsa_faithful", "nsa"]
 def test_selected_kernel_shapes(kernel, n, g, h_k):
     q, k, v, idx, valid, cfg = make_inputs(
         jax.random.PRNGKey(0), n, g * h_k, h_k, 32, 32, 4, 16, jnp.float32)
-    cfg = NSAConfig(**{**cfg.__dict__, "kernel": kernel})
-    out = ops.selected_attention(q, k, v, idx, valid, cfg)
+    out = selected_attention(q, k, v, idx, valid, cfg, kernel=kernel)
     oracle = ref.selected_ref(q, k, v, idx, valid, cfg)
     np.testing.assert_allclose(out, oracle, atol=2e-5, rtol=2e-5)
 
@@ -46,8 +48,7 @@ def test_selected_kernel_shapes(kernel, n, g, h_k):
 def test_selected_kernel_dk_ne_dv(kernel):
     q, k, v, idx, valid, cfg = make_inputs(
         jax.random.PRNGKey(1), 64, 4, 2, 24, 16, 3, 16, jnp.float32)
-    cfg = NSAConfig(**{**cfg.__dict__, "kernel": kernel})
-    out = ops.selected_attention(q, k, v, idx, valid, cfg)
+    out = selected_attention(q, k, v, idx, valid, cfg, kernel=kernel)
     oracle = ref.selected_ref(q, k, v, idx, valid, cfg)
     np.testing.assert_allclose(out, oracle, atol=2e-5, rtol=2e-5)
 
@@ -56,8 +57,7 @@ def test_selected_kernel_dk_ne_dv(kernel):
 def test_selected_kernel_bf16(kernel):
     q, k, v, idx, valid, cfg = make_inputs(
         jax.random.PRNGKey(2), 64, 4, 2, 32, 32, 4, 16, jnp.bfloat16)
-    cfg = NSAConfig(**{**cfg.__dict__, "kernel": kernel})
-    out = ops.selected_attention(q, k, v, idx, valid, cfg)
+    out = selected_attention(q, k, v, idx, valid, cfg, kernel=kernel)
     oracle = ref.selected_ref(q.astype(jnp.float32), k.astype(jnp.float32),
                               v.astype(jnp.float32), idx, valid, cfg)
     np.testing.assert_allclose(out.astype(jnp.float32), oracle, atol=3e-2,
@@ -69,8 +69,7 @@ def test_selected_kernel_bf16(kernel):
 def test_selected_kernel_block_sizes(kernel, b_k, t_sel):
     q, k, v, idx, valid, cfg = make_inputs(
         jax.random.PRNGKey(3), 128, 2, 1, 32, 32, t_sel, b_k, jnp.float32)
-    cfg = NSAConfig(**{**cfg.__dict__, "kernel": kernel})
-    out = ops.selected_attention(q, k, v, idx, valid, cfg)
+    out = selected_attention(q, k, v, idx, valid, cfg, kernel=kernel)
     oracle = ref.selected_ref(q, k, v, idx, valid, cfg)
     np.testing.assert_allclose(out, oracle, atol=2e-5, rtol=2e-5)
 
@@ -79,11 +78,8 @@ def test_fsa_matches_faithful_bitwise_semantics():
     """The one-kernel TPU form and the three-kernel paper form agree."""
     q, k, v, idx, valid, cfg = make_inputs(
         jax.random.PRNGKey(4), 96, 4, 2, 32, 32, 4, 16, jnp.float32)
-    o1 = ops.selected_attention(q, k, v, idx, valid,
-                                NSAConfig(**{**cfg.__dict__, "kernel": "fsa"}))
-    o2 = ops.selected_attention(
-        q, k, v, idx, valid,
-        NSAConfig(**{**cfg.__dict__, "kernel": "fsa_faithful"}))
+    o1 = selected_attention(q, k, v, idx, valid, cfg, kernel="fsa")
+    o2 = selected_attention(q, k, v, idx, valid, cfg, kernel="fsa_faithful")
     np.testing.assert_allclose(o1, o2, atol=1e-5, rtol=1e-5)
 
 
@@ -107,10 +103,9 @@ def test_flash_kernel(causal, window):
 def test_selected_gradients_match_oracle():
     q, k, v, idx, valid, cfg = make_inputs(
         jax.random.PRNGKey(6), 64, 2, 1, 16, 16, 3, 16, jnp.float32)
-    cfg = NSAConfig(**{**cfg.__dict__, "kernel": "fsa"})
-
     def f(q, k, v):
-        return (ops.selected_attention(q, k, v, idx, valid, cfg) ** 2).sum()
+        return (selected_attention(q, k, v, idx, valid, cfg,
+                                   kernel="fsa") ** 2).sum()
 
     def f_ref(q, k, v):
         return (ref.selected_ref(q, k, v, idx, valid, cfg) ** 2).sum()
@@ -130,6 +125,6 @@ def test_empty_selection_rows_are_zero():
     v = jax.random.normal(ks[2], (n, h_k, d))
     idx = jnp.zeros((n, h_k, 2), jnp.int32)
     valid = jnp.zeros((n, h_k, 2), bool)
-    cfg = NSAConfig(block_size=16, q_block_size=16, kernel="fsa")
-    out = ops.selected_attention(q, k, v, idx, valid, cfg)
+    cfg = NSAConfig(block_size=16, q_block_size=16)
+    out = selected_attention(q, k, v, idx, valid, cfg, kernel="fsa")
     np.testing.assert_allclose(out, jnp.zeros_like(out), atol=1e-6)

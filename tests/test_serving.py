@@ -201,7 +201,7 @@ def _rand_paged_state(seed=0, slots=3, h_k=2, g=2, d=16, max_pages=6,
     return state
 
 
-def _run_paged(st, *, use_kernel, tables=None, k_pages=None, v_pages=None,
+def _run_paged(st, *, backend, tables=None, k_pages=None, v_pages=None,
                block_s=None):
     return ops.paged_decode_attention_batched(
         st["gates"], st["q"],
@@ -209,17 +209,30 @@ def _run_paged(st, *, use_kernel, tables=None, k_pages=None, v_pages=None,
         st["v_pages"] if v_pages is None else v_pages,
         st["tables"] if tables is None else tables,
         st["cmp_k"], st["cmp_v"], st["pos"], st["cfg"],
-        use_kernel=use_kernel, block_s=block_s)
+        backend=backend, block_s=block_s)
 
 
 def test_paged_kernel_matches_gather_reference():
     """Interpret-mode Pallas paged-decode == gather-through-page-table
     reference, at fp32 tolerance, across uneven slot positions."""
     st = _rand_paged_state()
-    ref = _run_paged(st, use_kernel=False)
-    ker = _run_paged(st, use_kernel=True)
+    ref = _run_paged(st, backend="paged_gather")
+    ker = _run_paged(st, backend="paged_kernel")
     np.testing.assert_allclose(np.asarray(ref), np.asarray(ker),
                                rtol=1e-5, atol=1e-5)
+
+
+def test_paged_use_kernel_shim_warns_and_matches():
+    """The deprecated ``use_kernel=`` bool still works, warns, and maps onto
+    the paged_kernel / paged_gather registry backends."""
+    st = _rand_paged_state(seed=11)
+    new = _run_paged(st, backend="paged_kernel")
+    with pytest.warns(DeprecationWarning, match="use_kernel"):
+        old = ops.paged_decode_attention_batched(
+            st["gates"], st["q"], st["k_pages"], st["v_pages"], st["tables"],
+            st["cmp_k"], st["cmp_v"], st["pos"], st["cfg"], use_kernel=True)
+    np.testing.assert_allclose(np.asarray(old), np.asarray(new),
+                               rtol=1e-6, atol=1e-6)
 
 
 def test_page_table_permutation_invariance():
@@ -228,7 +241,7 @@ def test_page_table_permutation_invariance():
     the page table."""
     st = _rand_paged_state(seed=3)
     n_pages = st["k_pages"].shape[0]
-    base = _run_paged(st, use_kernel=True)
+    base = _run_paged(st, backend="paged_kernel")
 
     rng = np.random.default_rng(7)
     perm = np.concatenate([[0], 1 + rng.permutation(n_pages - 1)])  # keep dump
@@ -237,7 +250,7 @@ def test_page_table_permutation_invariance():
     k_shuf = jnp.zeros_like(st["k_pages"]).at[perm_j].set(st["k_pages"])
     v_shuf = jnp.zeros_like(st["v_pages"]).at[perm_j].set(st["v_pages"])
     tables_shuf = perm_j[st["tables"]].astype(jnp.int32)
-    shuf = _run_paged(st, use_kernel=True, tables=tables_shuf,
+    shuf = _run_paged(st, backend="paged_kernel", tables=tables_shuf,
                       k_pages=k_shuf, v_pages=v_shuf)
     np.testing.assert_allclose(np.asarray(base), np.asarray(shuf),
                                rtol=1e-6, atol=1e-6)
@@ -248,15 +261,15 @@ def test_batched_vs_sequential_decode_parity():
     the public API (both on the kernel path), including when the slot count
     does not divide the fold block (slot-padding path)."""
     st = _rand_paged_state(seed=5)                    # 3 slots
-    batched = _run_paged(st, use_kernel=True)
-    padded = _run_paged(st, use_kernel=True, block_s=2)   # 3 % 2 != 0
+    batched = _run_paged(st, backend="paged_kernel")
+    padded = _run_paged(st, backend="paged_kernel", block_s=2)  # 3 % 2 != 0
     np.testing.assert_allclose(np.asarray(batched), np.asarray(padded),
                                rtol=1e-5, atol=1e-5)
     for b in range(st["q"].shape[0]):
         single = ops.paged_decode_attention(
             st["gates"][b], st["q"][b], st["k_pages"], st["v_pages"],
             st["tables"][b], st["cmp_k"][b], st["cmp_v"][b], st["pos"][b],
-            st["cfg"], use_kernel=True)
+            st["cfg"], backend="paged_kernel")
         np.testing.assert_allclose(np.asarray(batched[b]), np.asarray(single),
                                    rtol=1e-5, atol=1e-5, err_msg=f"slot {b}")
 
@@ -265,14 +278,16 @@ def test_engine_decode_is_one_batched_dispatch(monkeypatch):
     """The engine's decode tick must trace exactly ONE batched paged-decode
     dispatch (the lax.scan over layers traces its body once), not one per
     slot."""
+    from repro.attention import backends as attn_backends
+
     calls = []
-    real = ops.paged_decode_attention_batched
+    real = attn_backends.paged_decode_attention
 
     def counting(*args, **kwargs):
         calls.append(args[1].shape)          # q: (B, h, d)
         return real(*args, **kwargs)
 
-    monkeypatch.setattr(ops, "paged_decode_attention_batched", counting)
+    monkeypatch.setattr(attn_backends, "paged_decode_attention", counting)
     cfg = _cfg()
     eng = Engine(cfg, n_slots=2, max_len=MAX_LEN, prefill_chunk=CHUNK)
     eng.submit(np.arange(1, 10) % cfg.vocab, max_new=2)
