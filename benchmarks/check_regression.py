@@ -8,9 +8,16 @@ metric regressed by more than ``--threshold`` (default 20%).
 
 Per-backend kernel latencies are compared key-by-key (``prefill/fsa``,
 ``paged_decode/paged_kernel``, ...), so a regression in ONE backend is
-named, not averaged away.  Metrics below ``--floor-us`` are skipped —
-micro-second-scale interpret-mode numbers on shared CI runners are noise.
-Throughput metrics (tok/s) regress when they *drop* by the threshold.
+named, not averaged away.  Every dict-valued section of the kernel document
+whose name carries a unit suffix (``*_us``, ``*_ms``, ``*_s``) is gated —
+``cpu_interpret_us`` (forward) and ``bwd_ms`` (jax.grad training step) today,
+any future section with zero gate changes.  Earlier versions hard-coded the
+one forward section, so a baseline that carried additional sections the
+candidate run omitted passed silently; now every baseline key in a unit
+section must reappear in the candidate (or the gate fails as MISSING).
+Metrics below ``--floor-us`` are skipped — micro-second-scale interpret-mode
+numbers on shared CI runners are noise.  Throughput metrics (tok/s) regress
+when they *drop* by the threshold.
 
 Usage (the CI bench-smoke job runs exactly this):
 
@@ -31,10 +38,28 @@ import shutil
 import sys
 
 
+# unit suffix of a latency section name -> scale to microseconds (the common
+# currency --floor-us is expressed in)
+_UNIT_TO_US = (("_us", 1.0), ("_ms", 1e3), ("_s", 1e6))
+
+
 def _kernel_latencies(doc: dict) -> dict:
-    """{metric: us} from a BENCH_kernel.json document."""
-    return {f"cpu_interpret_us/{k}": float(v)
-            for k, v in doc["results"].get("cpu_interpret_us", {}).items()}
+    """{metric: us} from a BENCH_kernel.json document.
+
+    Generic over sections: every dict of scalars under ``results`` whose
+    section name ends in a recognized unit suffix contributes metrics named
+    ``{section}/{key}``, normalized to microseconds.  A section the candidate
+    run omits therefore shows up as missing keys, never as a silent skip."""
+    out = {}
+    for section, vals in doc["results"].items():
+        if not isinstance(vals, dict):
+            continue
+        for suffix, scale in _UNIT_TO_US:
+            if section.endswith(suffix):
+                out.update({f"{section}/{k}": float(v) * scale
+                            for k, v in vals.items()})
+                break
+    return out
 
 
 def _serve_metrics(doc: dict) -> tuple:

@@ -11,6 +11,14 @@ This container has no TPU, so two complementary measurements are reported:
      (197 TFLOP/s bf16, 819 GB/s HBM): t = max(flops/peak, bytes/bw) from the
      §3.3 model — the roofline-derived Fig. 4 twin, per (g, B_K, T, N).
 
+``--pass fwd|bwd|fwdbwd`` selects what is timed: ``fwd`` the inference-path
+calls (historic behavior, default), ``bwd`` a ``jax.grad`` step through every
+differentiable train-capable backend (forward + backward, the training-step
+cost), ``fwdbwd`` both.  Backward rows land in a separate ``bwd_ms`` results
+section so the regression gate tracks training-path latency per backend —
+fused-backward backends (``fsa``, ``flash_*``) are timed through their Pallas
+backward kernels, twin-fallback backends through the XLA VJP.
+
 ``--json-out PATH`` writes the rows as a BENCH_kernel.json trajectory point
 (shared writer in ``benchmarks/results.py``; per-backend keys, so
 ``benchmarks/check_regression.py`` can diff them against a committed
@@ -86,18 +94,28 @@ def _paged_state(b_k, t_sel, h_k, g, d, slots, max_pages):
 
 
 def registry_rows(backends="all", n=256, g=2, h_k=2, d=32, b_k=16, t_sel=4,
-                  slots=4, max_pages=8):
-    """One latency row per (capable backend, benchmarked mode), driven from
+                  slots=4, max_pages=8, bench_pass="fwd"):
+    """Latency rows per (capable backend, benchmarked mode), driven from
     the ``repro.attention`` registry.  Backends whose declared ``min_g``
     exceeds the sweep's g are benchmarked at their minimum supported group
-    size (tagged in the row) instead of being skipped silently."""
+    size (tagged in the row) instead of being skipped silently.
+
+    Returns ``(fwd_rows, bwd_rows)``; either may be empty depending on
+    ``bench_pass``.  Backward rows time one whole ``jax.grad`` step (forward
+    + backward) of a scalar loss through ``nsa_attention(mode="train")`` for
+    every backend declaring ``differentiable`` — so fused-backward backends
+    are measured through their Pallas backward kernels and the rest through
+    the XLA twin fallback."""
     want = None if backends in ("all", None) else set(backends.split(","))
     if want is not None:
         unknown = want - set(list_backends())
         if unknown:
             raise SystemExit(f"unknown backend(s) {sorted(unknown)}; "
                              f"registered: {', '.join(list_backends())}")
+    time_fwd = bench_pass in ("fwd", "fwdbwd")
+    time_bwd = bench_pass in ("bwd", "fwdbwd")
     rows = []
+    bwd_rows = []
     states = {}
     paged = {}
 
@@ -124,6 +142,39 @@ def registry_rows(backends="all", n=256, g=2, h_k=2, d=32, b_k=16, t_sel=4,
         return {"backend": name, "mode": f"prefill/{algorithm}", "g": g,
                 "key": f"{algorithm}/{name}", "us": time_call(fn, q, k, v)}
 
+    def nsa_grad_bench(name, caps):
+        g_eff = max(g, caps.min_g)
+        if g_eff not in states:
+            states[g_eff] = _nsa_state(n, g_eff, h_k, d, b_k, t_sel)
+        cfg, p, gates, q, k, v = states[g_eff]
+
+        def loss(q, k, v):
+            out = nsa_attention(p, gates, q, k, v, cfg=cfg, mode="train",
+                                backend=name, needs_grad=True)
+            return jnp.sum(out * out)
+
+        fn = jax.jit(jax.grad(loss, argnums=(0, 1, 2)))
+        tag = f"@g{g_eff}" if g_eff != g else ""
+        return {"backend": name, "mode": "train", "g": g_eff,
+                "key": f"train/{name}{tag}",
+                "ms": time_call(fn, q, k, v) / 1e3}
+
+    def flash_grad_bench(name, algorithm):
+        if g not in states:
+            states[g] = _nsa_state(n, g, h_k, d, b_k, t_sel)
+        cfg, p, gates, q, k, v = states[g]
+
+        def loss(q, k, v):
+            out = nsa_attention(None, None, q, k, v, cfg=cfg, mode="train",
+                                backend=name, algorithm=algorithm,
+                                needs_grad=True)
+            return jnp.sum(out * out)
+
+        fn = jax.jit(jax.grad(loss, argnums=(0, 1, 2)))
+        return {"backend": name, "mode": f"train/{algorithm}", "g": g,
+                "key": f"{algorithm}/{name}",
+                "ms": time_call(fn, q, k, v) / 1e3}
+
     def paged_bench(name):
         if not paged:
             paged["state"] = _paged_state(b_k, t_sel, h_k, g, d, slots,
@@ -141,15 +192,23 @@ def registry_rows(backends="all", n=256, g=2, h_k=2, d=32, b_k=16, t_sel=4,
     for name, caps in list_backends().items():
         if want is not None and name not in want:
             continue
-        if "nsa" in caps.algorithms and "prefill" in caps.modes:
-            rows.append(nsa_bench(name, caps))
-        if "full" in caps.algorithms and "prefill" in caps.modes:
-            rows.append(flash_bench(name, "full"))
-        if "sliding" in caps.algorithms and "prefill" in caps.modes:
-            rows.append(flash_bench(name, "sliding"))
-        if "paged_decode" in caps.modes:
-            rows.append(paged_bench(name))
-    return rows
+        if time_fwd:
+            if "nsa" in caps.algorithms and "prefill" in caps.modes:
+                rows.append(nsa_bench(name, caps))
+            if "full" in caps.algorithms and "prefill" in caps.modes:
+                rows.append(flash_bench(name, "full"))
+            if "sliding" in caps.algorithms and "prefill" in caps.modes:
+                rows.append(flash_bench(name, "sliding"))
+            if "paged_decode" in caps.modes:
+                rows.append(paged_bench(name))
+        if time_bwd and caps.differentiable and "train" in caps.modes:
+            if "nsa" in caps.algorithms:
+                bwd_rows.append(nsa_grad_bench(name, caps))
+            if "full" in caps.algorithms:
+                bwd_rows.append(flash_grad_bench(name, "full"))
+            if "sliding" in caps.algorithms:
+                bwd_rows.append(flash_grad_bench(name, "sliding"))
+    return rows, bwd_rows
 
 
 def v5e_projection():
@@ -184,15 +243,22 @@ def main(argv=None):
                          "a comma-separated list of registry names")
     ap.add_argument("--json-out", default=None,
                     help="write a BENCH_kernel.json trajectory point here")
+    ap.add_argument("--pass", dest="bench_pass", default="fwd",
+                    choices=("fwd", "bwd", "fwdbwd"),
+                    help="time forward calls, jax.grad training steps "
+                         "(fwd+bwd through the backend's VJP), or both")
     ap.add_argument("--tiny", action="store_true",
                     help="CI bench-smoke shapes (smaller N)")
     args = ap.parse_args(argv)
 
     shape = dict(n=64, b_k=8, t_sel=2, slots=2, max_pages=4) if args.tiny \
         else {}
-    rows = registry_rows(args.backend, **shape)
+    rows, bwd_rows = registry_rows(args.backend, bench_pass=args.bench_pass,
+                                   **shape)
     for r in rows:
         print(f"kernel_bench,{r['key']}_cpu_interpret,{r['us']:.0f}")
+    for r in bwd_rows:
+        print(f"kernel_bench,bwd/{r['key']}_cpu_interpret_ms,{r['ms']:.2f}")
     proj = v5e_projection()
     print("kernel_bench_v5e,N,B_K,T,g,fsa_us,nsa_us,full_us,speedup_vs_nsa,"
           "speedup_vs_full")
@@ -201,13 +267,19 @@ def main(argv=None):
               f"{r['fsa_us']:.1f},{r['nsa_us']:.1f},{r['full_us']:.1f},"
               f"{r['speedup_vs_nsa']:.2f},{r['speedup_vs_full']:.2f}")
     if args.json_out:
-        write_results(args.json_out, "kernel_bench", {
-            "cpu_interpret_us": {r["key"]: r["us"] for r in rows},
-            "backend_rows": rows,
+        payload = {
             "v5e_projection": proj,
             "tiny": args.tiny,
-        })
-    return rows
+            "pass": args.bench_pass,
+        }
+        if rows:
+            payload["cpu_interpret_us"] = {r["key"]: r["us"] for r in rows}
+            payload["backend_rows"] = rows
+        if bwd_rows:
+            payload["bwd_ms"] = {r["key"]: r["ms"] for r in bwd_rows}
+            payload["bwd_rows"] = bwd_rows
+        write_results(args.json_out, "kernel_bench", payload)
+    return rows, bwd_rows
 
 
 if __name__ == "__main__":

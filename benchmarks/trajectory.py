@@ -1,0 +1,137 @@
+"""Collate per-commit ``BENCH_*.json`` points into one perf trajectory.
+
+The CI bench-smoke job uploads a ``BENCH_kernel.json`` / ``BENCH_serve.json``
+pair per run (the ``benchmarks/results.py`` envelope).  This tool takes any
+number of such documents — downloaded artifacts from several commits, the
+committed baselines, a fresh local run — and collates them into
+
+  * ``BENCH_trajectory.json`` — per-bench, per-metric time series (sorted by
+    the envelope's ``unix_time``), with the environment fingerprint of every
+    point kept so cross-version segments remain identifiable;
+  * a markdown table (``--md-out``) with first/last values and the relative
+    drift, for dropping into a PR comment or the job summary.
+
+Metric extraction is shared with ``check_regression.py`` (same names, same
+microsecond normalization), so the trajectory shows exactly what the gate
+gates — ``cpu_interpret_us/*`` forward latencies, ``bwd_ms/*`` training-step
+latencies, serve latencies/throughputs.
+
+Usage (the CI bench-smoke job collates the committed baseline with the fresh
+run — a two-point trajectory per metric; longer histories come from feeding
+more artifacts):
+
+  python benchmarks/trajectory.py BENCH_kernel.json BENCH_serve.json \
+      benchmarks/baselines/*.json \
+      --json-out BENCH_trajectory.json --md-out BENCH_trajectory.md
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import sys
+
+try:
+    from benchmarks.check_regression import extract
+except ImportError:      # script-style run: benchmarks/ itself is sys.path[0]
+    from check_regression import extract
+
+
+def load_points(paths) -> list:
+    """Read envelope documents, skipping files that are not bench points."""
+    points = []
+    for p in paths:
+        path = pathlib.Path(p)
+        try:
+            doc = json.loads(path.read_text())
+        except (OSError, json.JSONDecodeError) as e:
+            print(f"[trajectory] skip {path}: {e}", file=sys.stderr)
+            continue
+        if "bench" not in doc or "results" not in doc:
+            print(f"[trajectory] skip {path}: not a bench envelope",
+                  file=sys.stderr)
+            continue
+        points.append((doc, str(path)))
+    return points
+
+
+def collate(points) -> dict:
+    """{bench: {"points": [...], "series": {metric: [values...]}}}.
+
+    Points are sorted by ``unix_time`` within each bench; a metric absent
+    from some point contributes ``None`` at that position, so gaps (a
+    backend added later, a retired metric) stay visible instead of silently
+    compacting the series."""
+    by_bench = {}
+    for doc, src in points:
+        by_bench.setdefault(doc["bench"], []).append((doc, src))
+    out = {}
+    for bench, docs in by_bench.items():
+        docs.sort(key=lambda d: d[0].get("unix_time", 0))
+        metas, metrics_per_point = [], []
+        for doc, src in docs:
+            lat, thr = extract(doc)
+            metrics_per_point.append({**lat, **thr})
+            metas.append({
+                "source": src,
+                "unix_time": doc.get("unix_time"),
+                "environment": doc.get("environment", {}),
+            })
+        names = sorted(set().union(*metrics_per_point)) \
+            if metrics_per_point else []
+        series = {m: [pt.get(m) for pt in metrics_per_point] for m in names}
+        out[bench] = {"points": metas, "series": series}
+    return out
+
+
+def markdown(traj: dict) -> str:
+    lines = ["# Bench trajectory", ""]
+    for bench, data in sorted(traj.items()):
+        n = len(data["points"])
+        lines += [f"## {bench} ({n} point{'s' * (n != 1)})", "",
+                  "| metric | first | last | drift |",
+                  "|---|---:|---:|---:|"]
+        for metric, values in sorted(data["series"].items()):
+            present = [v for v in values if v is not None]
+            if not present:
+                continue
+            first, last = present[0], present[-1]
+            drift = f"{(last / first - 1):+.1%}" if first else "n/a"
+            gap = "" if len(present) == len(values) else " (gaps)"
+            lines.append(f"| {metric} | {first:.1f} | {last:.1f} "
+                         f"| {drift}{gap} |")
+        lines.append("")
+    return "\n".join(lines) + "\n"
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("inputs", nargs="+",
+                    help="BENCH_*.json envelope documents (any benches, any "
+                         "number of commits; grouped and time-sorted here)")
+    ap.add_argument("--json-out", default="BENCH_trajectory.json")
+    ap.add_argument("--md-out", default=None,
+                    help="also write the markdown drift table here")
+    args = ap.parse_args(argv)
+
+    points = load_points(args.inputs)
+    if not points:
+        print("[trajectory] no valid bench documents given", file=sys.stderr)
+        return 1
+    traj = collate(points)
+    pathlib.Path(args.json_out).write_text(
+        json.dumps(traj, indent=2, sort_keys=True, default=float) + "\n")
+    print(f"[trajectory] wrote {args.json_out} "
+          f"({sum(len(d['points']) for d in traj.values())} points, "
+          f"{len(traj)} benches)", file=sys.stderr)
+    md = markdown(traj)
+    if args.md_out:
+        pathlib.Path(args.md_out).write_text(md)
+        print(f"[trajectory] wrote {args.md_out}", file=sys.stderr)
+    else:
+        print(md)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

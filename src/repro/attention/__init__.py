@@ -34,7 +34,7 @@ from repro.attention.backends import (
     selected_attention,
     sparse_selected_fn,
 )
-from repro.attention.vjp import twin_vjp
+from repro.attention.vjp import kernel_vjp, twin_vjp
 
 __all__ = [
     "ALGORITHMS",
@@ -50,6 +50,7 @@ __all__ = [
     "default_selected_kernel",
     "flash_attention",
     "get_backend",
+    "kernel_vjp",
     "list_backends",
     "normalize_backend_name",
     "nsa_attention",

@@ -32,35 +32,54 @@ from repro.core.reference import (_gqa_out, _gqa_scores, _safe_softmax,
 from repro.kernels import flash_attention as _flash
 from repro.kernels import fsa_faithful as _faithful
 from repro.kernels import fsa_selected as _fsa
+from repro.kernels import fsa_selected_bwd as _fsa_bwd
 from repro.kernels import nsa_selected as _nsa
 from repro.kernels import paged_decode as _paged
 from repro.kernels import ref as _ref
 from repro.attention.registry import Capabilities, register_backend
-from repro.attention.vjp import twin_vjp
+from repro.attention.vjp import kernel_vjp
 
 SELECTED_KERNELS = ("fsa", "fsa_faithful", "nsa", "reference")
+# selected-branch kernels with a fused Pallas backward (others fall back to
+# the XLA twin under the same kernel_vjp op)
+FUSED_BWD_SELECTED = ("fsa", "fsa_faithful")
 
 
 def _pad_tokens(x, n_pad):
     return jnp.pad(x, ((0, n_pad - x.shape[0]),) + ((0, 0),) * (x.ndim - 1))
 
 
-# =====================================================================
-# selected branch: Pallas kernel forward + chunked-gather XLA twin
-# =====================================================================
-def _selected_fwd_impl(static, q, k, v, idx, valid):
-    cfg, kernel = static
-    n, h, d = q.shape
-    h_k = k.shape[1]
-    g = h // h_k
+def _q_padding(cfg, n):
+    """(block_q, padded token count) for an N-token query sequence."""
     bq = min(cfg.q_block_size, max(8, n))
-    n_pad = ((n + bq - 1) // bq) * bq
+    return bq, ((n + bq - 1) // bq) * bq
 
-    qp = _pad_tokens(q, n_pad)
-    idxp = _pad_tokens(idx, n_pad)
-    validp = _pad_tokens(valid, n_pad)
-    # normalize: ascending sort, duplicates invalidated (top-k selection never
-    # produces dups, but the kernel contract must not depend on that)
+
+def _kv_layout(k, v, block_k):
+    """(S, h_K, d) k/v -> kernel layout (h_K, S_pad, d) padded to whole KV
+    blocks (a partial trailing block would read out of bounds); returns the
+    logical S for the kernels' key-position masks."""
+    s = k.shape[0]
+    s_pad = ((s + block_k - 1) // block_k) * block_k
+    return (_pad_tokens(k, s_pad).transpose(1, 0, 2),
+            _pad_tokens(v, s_pad).transpose(1, 0, 2), s)
+
+
+def _delta_panels(do_rows, o_rows):
+    """delta = rowsum(dO ∘ O) broadcast to the (h_K, N·g, 128) residual
+    panel layout the backward kernels read (lane-broadcast like lse)."""
+    delta = jnp.sum(do_rows.astype(jnp.float32) * o_rows.astype(jnp.float32),
+                    axis=-1, keepdims=True)
+    return jnp.broadcast_to(delta, delta.shape[:-1] + (128,))
+
+
+# =====================================================================
+# selected branch: Pallas kernel forward, fused Pallas backward for the
+# FSA kernels, chunked-gather XLA twin as the fallback backward
+# =====================================================================
+def _normalize_selection(idxp, validp):
+    """Ascending sort, duplicates invalidated (top-k selection never produces
+    dups, but the kernel contract must not depend on that)."""
     key = jnp.where(validp, idxp, jnp.iinfo(jnp.int32).max // 2)
     order = jnp.argsort(key, axis=-1)
     idxp = jnp.take_along_axis(idxp, order, axis=-1)
@@ -70,62 +89,114 @@ def _selected_fwd_impl(static, q, k, v, idx, valid):
          (idxp[..., 1:] == idxp[..., :-1]) & validp[..., 1:] & validp[..., :-1]],
         axis=-1)
     validp &= ~dup
+    return idxp, validp
+
+
+def _selected_run(static, q, k, v, idx, valid, want_lse):
+    cfg, kernel = static
+    n, h, d = q.shape
+    h_k = k.shape[1]
+    g = h // h_k
+    bq, n_pad = _q_padding(cfg, n)
+
+    qp = _pad_tokens(q, n_pad)
+    idxp, validp = _normalize_selection(_pad_tokens(idx, n_pad),
+                                        _pad_tokens(valid, n_pad))
     sel = jnp.where(validp, idxp, -1).astype(jnp.int32)       # (N, h_K, T)
     # rows layout for sel: repeat each token's list over the g group heads
     sel_rows = jnp.repeat(sel.transpose(1, 0, 2), g, axis=1)  # (h_K, N·g, T)
     q_rows = _ref.rows_from_heads(qp, h_k)
-    k_t = k.transpose(1, 0, 2)
-    v_t = v.transpose(1, 0, 2)
+    k_t, v_t, s = _kv_layout(k, v, cfg.block_size)
 
     if kernel == "nsa":
         g_pad = max(g, 8)
         q_pad = qp.reshape(n_pad, h_k, g, d).transpose(1, 0, 2, 3)
         q_pad = jnp.pad(q_pad, ((0, 0), (0, 0), (0, g_pad - g), (0, 0)))
         o = _nsa.nsa_selected(q_pad, k_t, v_t, sel.transpose(1, 0, 2),
-                              block_k=cfg.block_size, interpret=cfg.interpret)
+                              block_k=cfg.block_size, seq_len=s,
+                              interpret=cfg.interpret)
         o = o[:, :, :g].transpose(1, 0, 2, 3).reshape(n_pad, h, -1)
-        return o[:n]
+        return o[:n], None
 
-    kv_ids, kv_cnt = indexing.build_qblock_union(idxp, validp, cfg, k.shape[0])
+    kv_ids, kv_cnt = indexing.build_qblock_union(idxp, validp, cfg, s)
     if kernel == "fsa":
         o_rows = _fsa.fsa_selected(q_rows, k_t, v_t, sel_rows, kv_ids, kv_cnt,
                                    g=g, block_q=bq, block_k=cfg.block_size,
-                                   interpret=cfg.interpret)
+                                   seq_len=s, interpret=cfg.interpret,
+                                   return_lse=want_lse)
     elif kernel == "fsa_faithful":
         q_ids, slot_ids, q_cnt = indexing.build_kvblock_qlists(
-            idxp, validp, cfg, k.shape[0], union_cap=kv_ids.shape[-1])
+            idxp, validp, cfg, s, union_cap=kv_ids.shape[-1])
         o_rows = _faithful.fsa_faithful(q_rows, k_t, v_t, sel_rows, kv_ids,
                                         kv_cnt, q_ids, slot_ids, q_cnt, g=g,
                                         block_q=bq, block_k=cfg.block_size,
-                                        interpret=cfg.interpret)
+                                        seq_len=s, interpret=cfg.interpret,
+                                        return_lse=want_lse)
     elif kernel == "reference":
-        return _ref.selected_ref(q, k, v, idx, valid, cfg)
+        return _ref.selected_ref(q, k, v, idx, valid, cfg), None
     else:
         raise ValueError(f"unknown selected kernel: {kernel}")
-    return _ref.heads_from_rows(o_rows, n_pad)[:n]
+    if want_lse:
+        o_rows, lse = o_rows
+        return _ref.heads_from_rows(o_rows, n_pad)[:n], (o_rows, lse, sel)
+    return _ref.heads_from_rows(o_rows, n_pad)[:n], None
+
+
+def _selected_fwd_impl(static, q, k, v, idx, valid):
+    return _selected_run(static, q, k, v, idx, valid, want_lse=False)[0]
+
+
+def _selected_fused_fwd(static, q, k, v, idx, valid):
+    """Forward for the VJP: FSA kernels emit (out, lse) residuals; kernels
+    without a fused backward return residuals=None (twin fallback)."""
+    _, kernel = static
+    want = kernel in FUSED_BWD_SELECTED
+    return _selected_run(static, q, k, v, idx, valid, want_lse=want)
+
+
+def _selected_fused_bwd(static, res, tensors, dout):
+    """Fused dQ/dK/dV: rebuilds the forward's index lists (union lists for
+    dQ, occurrence lists for dK/dV) from the saved normalized selection and
+    launches the Pallas backward kernels."""
+    cfg, _ = static
+    o_rows, lse, sel = res
+    q, k, v = tensors[:3]
+    n, h, d = q.shape
+    s, h_k, _ = k.shape
+    g = h // h_k
+    bq, n_pad = _q_padding(cfg, n)
+
+    idxp, validp = jnp.maximum(sel, 0), sel >= 0
+    sel_rows = jnp.repeat(sel.transpose(1, 0, 2), g, axis=1)
+    q_rows = _ref.rows_from_heads(_pad_tokens(q, n_pad), h_k)
+    k_t, v_t, s = _kv_layout(k, v, cfg.block_size)
+    do_rows = _ref.rows_from_heads(_pad_tokens(dout, n_pad), h_k)
+    delta = _delta_panels(do_rows, o_rows)
+
+    kv_ids, kv_cnt = indexing.build_qblock_union(idxp, validp, cfg, s)
+    q_ids, _, q_cnt = indexing.build_kvblock_qlists(idxp, validp, cfg, s)
+    kw = dict(g=g, block_q=bq, block_k=cfg.block_size, seq_len=s,
+              interpret=cfg.interpret)
+    dq_rows = _fsa_bwd.fsa_selected_dq(q_rows, k_t, v_t, sel_rows, do_rows,
+                                       lse, delta, kv_ids, kv_cnt, **kw)
+    dk_t, dv_t = _fsa_bwd.fsa_selected_dkv(q_rows, k_t, v_t, sel_rows,
+                                           do_rows, lse, delta, q_ids, q_cnt,
+                                           **kw)
+    dq = _ref.heads_from_rows(dq_rows, n_pad)[:n].astype(q.dtype)
+    dk = dk_t[:, :s].transpose(1, 0, 2).astype(k.dtype)
+    dv = dv_t[:, :s].transpose(1, 0, 2).astype(v.dtype)
+    return dq, dk, dv
 
 
 def _selected_twin(static, q, k, v, idx, valid):
     """Differentiable twin of the selected kernels (chunked gather path)."""
     cfg, _ = static
-    n = q.shape[0]
-    c = min(512, n)
-    pad = (c - n % c) % c
-    qp, idxp, validp = (_pad_tokens(a, n + pad) for a in (q, idx, valid))
-
-    def body(args):
-        q_c, i_c, v_c, pos_c = args
-        return sparse.selected_gather_attention(q_c, k, v, i_c, v_c, cfg, pos_c)
-
-    nc = (n + pad) // c
-    out = jax.lax.map(body, (qp.reshape(nc, c, *q.shape[1:]),
-                             idxp.reshape(nc, c, *idx.shape[1:]),
-                             validp.reshape(nc, c, *valid.shape[1:]),
-                             jnp.arange(n + pad).reshape(nc, c)))
-    return out.reshape(n + pad, q.shape[1], -1)[:n]
+    return sparse.selected_gather_chunked(q, k, v, idx, valid, cfg)
 
 
-_selected_op = twin_vjp(_selected_fwd_impl, _selected_twin, num_diff=3)
+_selected_op = kernel_vjp(_selected_fwd_impl, _selected_twin, num_diff=3,
+                          fused_fwd=_selected_fused_fwd,
+                          fused_bwd=_selected_fused_bwd)
 
 
 def default_selected_kernel(cfg: NSAConfig) -> str:
@@ -144,21 +215,65 @@ def selected_attention(q, k, v, idx, valid, cfg: NSAConfig,
 
 
 # =====================================================================
-# flash full / sliding: Pallas kernel forward + chunked-reference twin
+# flash full / sliding: Pallas kernel forward, fused Pallas backward,
+# chunked-reference twin kept as the VJP scaffolding fallback
 # =====================================================================
-def _flash_fwd_impl(static, q, k, v):
-    cfg, causal, window = static
+def _flash_layouts(cfg, q, k, v):
+    """Kernel layouts for flash.  Q pads to whole q blocks, K/V to whole kv
+    blocks (a partial trailing block would read out of bounds); the padding
+    amounts differ, so the *logical* causal alignment (key position of query
+    token 0) and key count are passed explicitly — the kernel's default
+    end-of-array alignment would shift the causal band for ragged N."""
     n, h, d = q.shape
-    h_k = k.shape[1]
+    s, h_k, _ = k.shape
     g = h // h_k
-    bq = min(cfg.q_block_size, max(8, n))
-    n_pad = ((n + bq - 1) // bq) * bq
+    bq, n_pad = _q_padding(cfg, n)
+    bk = min(128, s)
     q_rows = _ref.rows_from_heads(_pad_tokens(q, n_pad), h_k)
-    o_rows = _flash.flash_attention(
-        q_rows, k.transpose(1, 0, 2), v.transpose(1, 0, 2), g=g, causal=causal,
-        window=window, block_q=bq, block_k=min(128, k.shape[0]),
-        interpret=cfg.interpret)
-    return _ref.heads_from_rows(o_rows, n_pad)[:n]
+    k_t, v_t, _ = _kv_layout(k, v, bk)
+    return q_rows, k_t, v_t, dict(g=g, block_q=bq, block_k=bk, valid_k=s,
+                                  offset=s - n, interpret=cfg.interpret), n_pad
+
+
+def _flash_run(static, q, k, v, want_lse):
+    cfg, causal, window = static
+    n = q.shape[0]
+    q_rows, k_t, v_t, kw, n_pad = _flash_layouts(cfg, q, k, v)
+    res = _flash.flash_attention(q_rows, k_t, v_t, causal=causal,
+                                 window=window, return_lse=want_lse, **kw)
+    if want_lse:
+        o_rows, lse = res
+        return _ref.heads_from_rows(o_rows, n_pad)[:n], (o_rows, lse)
+    return _ref.heads_from_rows(res, n_pad)[:n], None
+
+
+def _flash_fwd_impl(static, q, k, v):
+    return _flash_run(static, q, k, v, want_lse=False)[0]
+
+
+def _flash_fused_fwd(static, q, k, v):
+    return _flash_run(static, q, k, v, want_lse=True)
+
+
+def _flash_fused_bwd(static, res, tensors, dout):
+    cfg, causal, window = static
+    o_rows, lse = res
+    q, k, v = tensors
+    n = q.shape[0]
+    s = k.shape[0]
+    h_k = k.shape[1]
+    q_rows, k_t, v_t, kw, n_pad = _flash_layouts(cfg, q, k, v)
+    do_rows = _ref.rows_from_heads(_pad_tokens(dout, n_pad), h_k)
+    delta = _delta_panels(do_rows, o_rows)
+    dq_rows = _flash.flash_attention_dq(q_rows, k_t, v_t, do_rows, lse, delta,
+                                        causal=causal, window=window, **kw)
+    dk_t, dv_t = _flash.flash_attention_dkv(q_rows, k_t, v_t, do_rows, lse,
+                                            delta, causal=causal,
+                                            window=window, **kw)
+    dq = _ref.heads_from_rows(dq_rows, n_pad)[:n].astype(q.dtype)
+    dk = dk_t[:, :s].transpose(1, 0, 2).astype(k.dtype)
+    dv = dv_t[:, :s].transpose(1, 0, 2).astype(v.dtype)
+    return dq, dk, dv
 
 
 def _flash_twin(static, q, k, v):
@@ -166,7 +281,9 @@ def _flash_twin(static, q, k, v):
     return _ref.flash_ref_chunked(q, k, v, causal=causal, window=window)
 
 
-_flash_op = twin_vjp(_flash_fwd_impl, _flash_twin, num_diff=3)
+_flash_op = kernel_vjp(_flash_fwd_impl, _flash_twin, num_diff=3,
+                       fused_fwd=_flash_fused_fwd,
+                       fused_bwd=_flash_fused_bwd)
 
 
 def flash_attention(q, k, v, cfg: NSAConfig, *, causal: bool = True,
@@ -323,11 +440,11 @@ def _register_selected_kernel_backend(name, caps):
 
 _register_selected_kernel_backend("fsa", Capabilities(
     modes=("train", "prefill"), algorithms=("nsa",), differentiable=True,
-    priority=60, preferred_platforms=("tpu",)))
+    fused_backward=True, priority=60, preferred_platforms=("tpu",)))
 
 _register_selected_kernel_backend("fsa_faithful", Capabilities(
     modes=("train", "prefill"), algorithms=("nsa",), differentiable=True,
-    priority=40, preferred_platforms=("tpu",)))
+    fused_backward=True, priority=40, preferred_platforms=("tpu",)))
 
 # The vanilla-NSA loop order keeps one query row per (token, head) in the
 # MXU M dim, so it only fills the matmul when the GQA group is wide: the
@@ -363,7 +480,7 @@ def _sparse_gather_backend(params, gates, q, k, v, cache, cfg, mode,
 
 @register_backend("flash_full", capabilities=Capabilities(
     modes=("train", "prefill"), algorithms=("full",), differentiable=True,
-    priority=5, preferred_platforms=("tpu",)))
+    fused_backward=True, priority=5, preferred_platforms=("tpu",)))
 def _flash_full_backend(params, gates, q, k, v, cache, cfg, mode,
                         causal: bool = True, **kw):
     return flash_attention(q, k, v, cfg, causal=causal, window=None)
@@ -371,7 +488,7 @@ def _flash_full_backend(params, gates, q, k, v, cache, cfg, mode,
 
 @register_backend("flash_sliding", capabilities=Capabilities(
     modes=("train", "prefill"), algorithms=("sliding",), differentiable=True,
-    priority=5, preferred_platforms=("tpu",)))
+    fused_backward=True, priority=5, preferred_platforms=("tpu",)))
 def _flash_sliding_backend(params, gates, q, k, v, cache, cfg, mode,
                            window: int | None = None, **kw):
     return flash_attention(q, k, v, cfg, causal=True,

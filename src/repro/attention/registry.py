@@ -30,6 +30,8 @@ class Capabilities:
     modes: tuple = ("train", "prefill")   # subset of MODES
     algorithms: tuple = ("nsa",)          # subset of ALGORITHMS
     differentiable: bool = False          # safe under jax.grad (custom VJP ok)
+    fused_backward: bool = False          # backward is a fused Pallas kernel
+                                          # (not the XLA-twin fallback)
     min_g: int = 1                        # supported GQA group-size range
     max_g: Optional[int] = None
     paged: bool = False                   # reads KV through page tables
@@ -42,6 +44,8 @@ class Capabilities:
                 f"alg={'|'.join(self.algorithms)}"]
         if self.differentiable:
             bits.append("grad")
+        if self.fused_backward:
+            bits.append("fused-bwd")
         if self.min_g > 1 or self.max_g is not None:
             bits.append(f"g∈[{self.min_g},{self.max_g or '∞'}]")
         if self.paged:
@@ -170,8 +174,14 @@ def capable_backends(req: AttentionRequest) -> tuple:
 
 
 def _score(caps: Capabilities, req: AttentionRequest) -> int:
-    return caps.priority + (100 if req.platform in caps.preferred_platforms
-                            else 0)
+    score = caps.priority + (100 if req.platform in caps.preferred_platforms
+                             else 0)
+    # training under jax.grad: prefer backends whose backward pass is a fused
+    # Pallas kernel over ones that pay the XLA-twin backward (the paper's
+    # training-speedup claim lives in the backward)
+    if req.mode == "train" and req.needs_grad and caps.fused_backward:
+        score += 50
+    return score
 
 
 def resolve(cfg, request: AttentionRequest,

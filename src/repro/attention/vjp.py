@@ -1,11 +1,15 @@
-"""Shared custom-VJP scaffolding for kernel-forward / XLA-twin-backward ops.
+"""Shared custom-VJP scaffolding for Pallas-forward attention ops.
 
 Every Pallas forward kernel in this repo pairs with a *differentiable twin*
-— the same math written in gather/einsum XLA ops — and the backward pass is
-``jax.vjp`` through that twin.  The boilerplate (residual packing, float0
-cotangents for integer/bool operands, nondiff static config) used to be
-duplicated per op (``_sel_fwd/_sel_bwd``, ``_flash_fwd/_flash_bwd``); it
-lives once here.
+— the same math written in gather/einsum XLA ops.  Historically the backward
+pass was always ``jax.vjp`` through that twin; :func:`kernel_vjp` now also
+accepts a *fused* backward (Pallas dQ/dK/dV kernels driven by residuals the
+forward packs — typically ``(out, lse)`` à la flash attention) and uses the
+twin only as the fallback for configurations the fused path does not cover.
+
+The boilerplate (residual packing, float0 cotangents for integer/bool
+operands, nondiff static config) used to be duplicated per op
+(``_sel_fwd/_sel_bwd``, ``_flash_fwd/_flash_bwd``); it lives once here.
 """
 from __future__ import annotations
 
@@ -15,14 +19,29 @@ import jax
 import jax.numpy as jnp
 
 
-def twin_vjp(fwd_impl, twin_impl, *, num_diff: int):
+def kernel_vjp(fwd_impl, twin_impl, *, num_diff: int,
+               fused_fwd=None, fused_bwd=None):
     """Build ``op(static, *tensors)`` with a custom VJP.
 
     ``fwd_impl(static, *tensors)`` runs the (non-differentiable) kernel
     forward; ``twin_impl(static, *tensors)`` is the XLA twin of identical
-    math.  The first ``num_diff`` tensors receive real cotangents (via
-    ``jax.vjp`` through the twin, rematerialized — nothing big is saved);
-    the rest (selection indices, validity masks, positions) get ``float0``.
+    math.  The first ``num_diff`` tensors receive real cotangents; the rest
+    (selection indices, validity masks, positions) get ``float0``.
+
+    With only the twin, the backward is ``jax.vjp`` through ``twin_impl``
+    (rematerialized — nothing big is saved).  A backend that declares a
+    fused backward additionally supplies:
+
+    * ``fused_fwd(static, *tensors) -> (out, residuals)`` — the kernel
+      forward that also emits backward residuals (out/lse in kernel
+      layouts).  Returning ``residuals=None`` opts this configuration out:
+      the backward falls back to the twin (e.g. a selected-branch kernel
+      name without a fused dQ/dKV implementation).
+    * ``fused_bwd(static, residuals, tensors, dout) -> grads`` — returns
+      cotangents for the first ``num_diff`` tensors.
+
+    ``residuals is None`` is pytree *structure*, so the twin-vs-fused branch
+    is resolved at trace time per ``static`` — no runtime cond.
 
     ``static`` must be hashable (e.g. an ``NSAConfig`` or a tuple of
     hashables) — it is a ``nondiff_argnums`` argument.
@@ -33,15 +52,27 @@ def twin_vjp(fwd_impl, twin_impl, *, num_diff: int):
         return fwd_impl(static, *tensors)
 
     def fwd(static, *tensors):
-        return fwd_impl(static, *tensors), tensors
+        if fused_fwd is None:
+            return fwd_impl(static, *tensors), (None, tensors)
+        out, residuals = fused_fwd(static, *tensors)
+        return out, (residuals, tensors)
 
-    def bwd(static, tensors, dout):
+    def bwd(static, pack, dout):
+        residuals, tensors = pack
         diff, nondiff = tensors[:num_diff], tensors[num_diff:]
-        _, pullback = jax.vjp(
-            lambda *d: twin_impl(static, *d, *nondiff), *diff)
-        grads = pullback(dout)
+        if residuals is None:
+            _, pullback = jax.vjp(
+                lambda *d: twin_impl(static, *d, *nondiff), *diff)
+            grads = tuple(pullback(dout))
+        else:
+            grads = tuple(fused_bwd(static, residuals, tensors, dout))
         zeros = tuple(jnp.zeros(t.shape, jax.dtypes.float0) for t in nondiff)
         return grads + zeros
 
     op.defvjp(fwd, bwd)
     return op
+
+
+def twin_vjp(fwd_impl, twin_impl, *, num_diff: int):
+    """Kernel forward + XLA-twin backward (no fused path). Compat wrapper."""
+    return kernel_vjp(fwd_impl, twin_impl, num_diff=num_diff)

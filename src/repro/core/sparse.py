@@ -60,6 +60,33 @@ def selected_gather_attention(q, k, v, idx, valid, cfg: NSAConfig, q_pos):
     return out.reshape(c, h, -1).astype(q.dtype)
 
 
+def selected_gather_chunked(q, k, v, idx, valid, cfg: NSAConfig,
+                            q_chunk: int = 512):
+    """Whole-sequence selected attention via :func:`selected_gather_attention`
+    over ``q_chunk``-token chunks (sequential ``lax.map``).
+
+    q: (N, h, d); k/v: (S, h_k, d); idx/valid: (N, h_k, T).  This is the
+    differentiable XLA twin behind the selected-branch Pallas kernels'
+    fallback VJP (``repro.attention.vjp.kernel_vjp``).
+    """
+    n = q.shape[0]
+    c = min(q_chunk, n)
+    pad = (c - n % c) % c
+    pad_tok = lambda a: jnp.pad(a, ((0, pad),) + ((0, 0),) * (a.ndim - 1))
+    qp, idxp, validp = pad_tok(q), pad_tok(idx), pad_tok(valid)
+
+    def body(args):
+        q_c, i_c, v_c, pos_c = args
+        return selected_gather_attention(q_c, k, v, i_c, v_c, cfg, pos_c)
+
+    nc = (n + pad) // c
+    out = jax.lax.map(body, (qp.reshape(nc, c, *q.shape[1:]),
+                             idxp.reshape(nc, c, *idx.shape[1:]),
+                             validp.reshape(nc, c, *valid.shape[1:]),
+                             jnp.arange(n + pad).reshape(nc, c)))
+    return out.reshape(n + pad, q.shape[1], -1)[:n]
+
+
 def _union_setup(q, k, v, idx, valid, cfg: NSAConfig, q_pos):
     """Shared fwd/bwd machinery: union lists, gathers, scores, mask."""
     from repro.parallel.axes import shard as _shard

@@ -114,11 +114,17 @@ def _reduce_kernel(kv_cnt, obuf_ref, o_ref, acc_scr):
 
 
 def fsa_faithful(q_rows, k, v, sel_rows, kv_ids, kv_cnt, q_ids, slot_ids, q_cnt,
-                 *, g: int, block_q: int, block_k: int, interpret: bool = True):
-    """Three-kernel FSA (paper structure). Same I/O contract as fsa_selected."""
+                 *, g: int, block_q: int, block_k: int,
+                 seq_len: int | None = None, interpret: bool = True,
+                 return_lse: bool = False):
+    """Three-kernel FSA (paper structure). Same I/O contract as fsa_selected.
+
+    ``return_lse=True`` additionally returns the statistics kernel's per-row
+    log-sum-exp (h_K, N·g, 128) float32 — the fused-backward residual (no
+    extra compute: kernel 1 produces it anyway)."""
     h_k, rows_total, d = q_rows.shape
     dv = v.shape[-1]
-    seq_len = k.shape[1]
+    seq_len = k.shape[1] if seq_len is None else seq_len
     nq, cap = kv_ids.shape[1], kv_ids.shape[2]
     nb, capq = q_ids.shape[1], q_ids.shape[2]
     rows = block_q * g
@@ -201,4 +207,4 @@ def fsa_faithful(q_rows, k, v, sel_rows, kv_ids, kv_cnt, q_ids, slot_ids, q_cnt,
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(kv_cnt, obuf)
-    return out
+    return (out, lse) if return_lse else out

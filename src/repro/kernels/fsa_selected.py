@@ -39,9 +39,13 @@ from repro.kernels.compat import tpu_compiler_params
 NEG_INF = -1e30
 
 
-def _kernel(kv_ids, kv_cnt, q_ref, k_ref, v_ref, sel_ref, o_ref,
-            m_scr, l_scr, acc_scr, *, scale, g, block_q, block_k, seq_len,
-            early_return=True):
+def _kernel(kv_ids, kv_cnt, q_ref, k_ref, v_ref, sel_ref, o_ref, *rest,
+            scale, g, block_q, block_k, seq_len, early_return=True,
+            with_lse=False):
+    if with_lse:
+        lse_ref, m_scr, l_scr, acc_scr = rest
+    else:
+        m_scr, l_scr, acc_scr = rest
     hk, iq, j = pl.program_id(0), pl.program_id(1), pl.program_id(2)
     cap = pl.num_programs(2)
     rows = q_ref.shape[1]
@@ -87,15 +91,29 @@ def _kernel(kv_ids, kv_cnt, q_ref, k_ref, v_ref, sel_ref, o_ref,
     def _done():
         l = l_scr[...][:, 0:1]
         o_ref[0] = (acc_scr[...] / jnp.maximum(l, 1e-30)).astype(o_ref.dtype)
+        if with_lse:
+            m = m_scr[...][:, 0:1]
+            # rows with no selected keys get +inf-like lse so exp(s-lse) -> 0
+            lse = jnp.where(l > 0, m + jnp.log(jnp.maximum(l, 1e-30)),
+                            -NEG_INF)
+            lse_ref[0] = jnp.broadcast_to(lse, lse_ref.shape[1:])
 
 
 def fsa_selected(q_rows, k, v, sel_rows, kv_ids, kv_cnt, *, g: int,
-                 block_q: int, block_k: int, interpret: bool = True,
-                 early_return: bool = True):
-    """Returns (h_K, N·g, d) selected-attention output (zeros for maskless rows)."""
+                 block_q: int, block_k: int, seq_len: int | None = None,
+                 interpret: bool = True, early_return: bool = True,
+                 return_lse: bool = False):
+    """Returns (h_K, N·g, d) selected-attention output (zeros for maskless rows).
+
+    With ``return_lse=True`` also returns the per-row log-sum-exp in the
+    flash-backward residual layout (h_K, N·g, 128) float32 (lane-broadcast;
+    same convention as ``fsa_faithful``'s statistics kernel) for the fused
+    backward pass."""
     h_k, rows_total, d = q_rows.shape
     dv = v.shape[-1]
-    seq_len = k.shape[1]
+    # seq_len is the logical key count: k/v may carry padding rows up to a
+    # whole number of KV blocks (keys at positions >= seq_len are masked)
+    seq_len = k.shape[1] if seq_len is None else seq_len
     nq = kv_ids.shape[1]
     cap = kv_ids.shape[2]
     rows = block_q * g
@@ -104,7 +122,15 @@ def fsa_selected(q_rows, k, v, sel_rows, kv_ids, kv_cnt, *, g: int,
 
     kernel = functools.partial(_kernel, scale=scale, g=g, block_q=block_q,
                                block_k=block_k, seq_len=seq_len,
-                               early_return=early_return)
+                               early_return=early_return, with_lse=return_lse)
+    out_specs = [pl.BlockSpec((1, rows, dv),
+                              lambda hk, iq, j, ids, cnt: (hk, iq, 0))]
+    out_shape = [jax.ShapeDtypeStruct((h_k, rows_total, dv), q_rows.dtype)]
+    if return_lse:
+        out_specs.append(pl.BlockSpec((1, rows, 128),
+                                      lambda hk, iq, j, ids, cnt: (hk, iq, 0)))
+        out_shape.append(
+            jax.ShapeDtypeStruct((h_k, rows_total, 128), jnp.float32))
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=2,
         grid=(h_k, nq, cap),
@@ -116,7 +142,7 @@ def fsa_selected(q_rows, k, v, sel_rows, kv_ids, kv_cnt, *, g: int,
                          lambda hk, iq, j, ids, cnt: (hk, ids[hk, iq, j], 0)),
             pl.BlockSpec((1, rows, t), lambda hk, iq, j, ids, cnt: (hk, iq, 0)),
         ],
-        out_specs=pl.BlockSpec((1, rows, dv), lambda hk, iq, j, ids, cnt: (hk, iq, 0)),
+        out_specs=out_specs if return_lse else out_specs[0],
         scratch_shapes=[
             pltpu.VMEM((rows, 128), jnp.float32),
             pltpu.VMEM((rows, 128), jnp.float32),
@@ -126,7 +152,7 @@ def fsa_selected(q_rows, k, v, sel_rows, kv_ids, kv_cnt, *, g: int,
     return pl.pallas_call(
         kernel,
         grid_spec=grid_spec,
-        out_shape=jax.ShapeDtypeStruct((h_k, rows_total, dv), q_rows.dtype),
+        out_shape=out_shape if return_lse else out_shape[0],
         compiler_params=tpu_compiler_params(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,

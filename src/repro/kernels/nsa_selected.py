@@ -67,12 +67,16 @@ def _kernel(idx_ref, q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
         o_ref[0, 0] = (acc_scr[...] / jnp.maximum(l, 1e-30)).astype(o_ref.dtype)
 
 
-def nsa_selected(q_pad, k, v, idx, *, block_k: int, interpret: bool = True):
-    """q_pad: (h_K, N, g_pad, d); idx: (h_K, N, T). Returns like q_pad."""
+def nsa_selected(q_pad, k, v, idx, *, block_k: int,
+                 seq_len: int | None = None, interpret: bool = True):
+    """q_pad: (h_K, N, g_pad, d); idx: (h_K, N, T). Returns like q_pad.
+
+    ``seq_len`` is the logical key count when k/v carry padding rows up to a
+    whole number of KV blocks (defaults to the array length)."""
     h_k, n, g_pad, d = q_pad.shape
     dv = v.shape[-1]
     t_sel = idx.shape[-1]
-    seq_len = k.shape[1]
+    seq_len = k.shape[1] if seq_len is None else seq_len
     scale = 1.0 / (d ** 0.5)
 
     kernel = functools.partial(_kernel, scale=scale, g_pad=g_pad,

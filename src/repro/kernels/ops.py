@@ -14,10 +14,11 @@ the *dispatch* — which organization runs for which request — lives in
                          / ``paged_gather`` registry backends (one release
                          of warnings)
 
-Forward runs the kernel; backward is a custom VJP through the sparse
-gather formulation (identical math, XLA-differentiable) via the shared
-scaffolding in ``repro.attention.vjp`` — on-TPU backward kernels are a
-recorded extension (see ROADMAP.md "Open items").
+Forward runs the kernel; backward goes through the shared custom-VJP
+scaffolding in ``repro.attention.vjp`` — fused Pallas backward kernels
+(``fsa_selected_bwd``, the flash dq/dkv kernels) for the backends that
+declare ``fused_backward``, the differentiable sparse-gather twin
+(identical math, XLA-differentiable) for the rest.
 """
 from __future__ import annotations
 

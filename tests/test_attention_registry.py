@@ -149,6 +149,25 @@ def test_resolve_auto_defaults():
                                          platform="tpu")).name == "fsa"
 
 
+def test_resolve_prefers_fused_backward_for_training():
+    """A train-mode request under jax.grad lands on a fused-backward
+    backend (the Pallas backward kernels), not the XLA-twin paths — while
+    inference-shaped requests (needs_grad=False, as in
+    test_resolve_auto_defaults) keep the historic defaults."""
+    req = AttentionRequest(mode="train", seq_len=N, g=2, needs_grad=True)
+    assert resolve(CFG, req).name == "fsa"
+    assert list_backends()["fsa"].fused_backward
+    for algorithm, expect in (("full", "flash_full"),
+                              ("sliding", "flash_sliding")):
+        req = AttentionRequest(mode="train", algorithm=algorithm, seq_len=N,
+                               g=2, needs_grad=True)
+        assert resolve(CFG, req).name == expect
+        assert list_backends()[expect].fused_backward
+    # the bonus is train-only: prefill+needs_grad keeps the inference pick
+    req = AttentionRequest(mode="prefill", seq_len=N, g=2, needs_grad=True)
+    assert resolve(CFG, req).name == "sparse_union"
+
+
 def test_resolve_min_seq_dense_fallback():
     cfg = dataclasses.replace(CFG, min_seq_for_sparse=256)
     assert resolve(cfg, AttentionRequest(mode="train", seq_len=64,

@@ -100,19 +100,93 @@ def test_flash_kernel(causal, window):
     np.testing.assert_allclose(out, oracle, atol=2e-5, rtol=2e-5)
 
 
-def test_selected_gradients_match_oracle():
+@pytest.mark.parametrize("kernel", KERNELS)
+def test_selected_kernel_ragged_n(kernel):
+    """N not a multiple of the KV block: the trailing partial block must be
+    masked by the logical seq_len, not read out of bounds (interpret mode
+    pads OOB reads with NaN, and 0·NaN would poison the p@v accumulation)."""
     q, k, v, idx, valid, cfg = make_inputs(
-        jax.random.PRNGKey(6), 64, 2, 1, 16, 16, 3, 16, jnp.float32)
+        jax.random.PRNGKey(8), 100, 2, 2, 32, 32, 4, 16, jnp.float32)
+    out = selected_attention(q, k, v, idx, valid, cfg, kernel=kernel)
+    oracle = ref.selected_ref(q, k, v, idx, valid, cfg)
+    np.testing.assert_allclose(out, oracle, atol=2e-5, rtol=2e-5)
+
+
+@pytest.mark.parametrize("kernel", ["fsa", "fsa_faithful"])
+@pytest.mark.parametrize("n,g,h_k,dk,dv", [(64, 2, 1, 16, 16),
+                                           (100, 1, 2, 32, 24)])
+def test_selected_gradients_match_oracle(kernel, n, g, h_k, dk, dv):
+    """Fused Pallas backward (dQ via union lists, dK/dV via occurrence
+    lists) vs grad of the dense selected oracle — incl. ragged N and
+    dk != dv, for both fused-backward kernel organizations."""
+    q, k, v, idx, valid, cfg = make_inputs(
+        jax.random.PRNGKey(6), n, g * h_k, h_k, dk, dv, 3, 16, jnp.float32)
+
     def f(q, k, v):
         return (selected_attention(q, k, v, idx, valid, cfg,
-                                   kernel="fsa") ** 2).sum()
+                                   kernel=kernel) ** 2).sum()
 
     def f_ref(q, k, v):
         return (ref.selected_ref(q, k, v, idx, valid, cfg) ** 2).sum()
 
-    g = jax.grad(f, argnums=(0, 1, 2))(q, k, v)
+    grads = jax.grad(f, argnums=(0, 1, 2))(q, k, v)
     g_ref = jax.grad(f_ref, argnums=(0, 1, 2))(q, k, v)
-    for a, b in zip(g, g_ref):
+    for a, b in zip(grads, g_ref):
+        np.testing.assert_allclose(a, b, atol=5e-5, rtol=5e-5)
+
+
+def test_selected_lse_residual_consistent_across_kernels():
+    """The (out, lse) residual the fused backward consumes: the one-kernel
+    FSA form and the three-kernel paper form emit identical lse panels, and
+    maskless rows carry the +1e30 sentinel so exp(s - lse) underflows to 0."""
+    from repro.attention import backends as ab
+    q, k, v, idx, valid, cfg = make_inputs(
+        jax.random.PRNGKey(9), 64, 2, 2, 16, 16, 3, 16, jnp.float32)
+    outs, lses = {}, {}
+    for kernel in ("fsa", "fsa_faithful"):
+        out, res = ab._selected_run((cfg, kernel), q, k, v, idx, valid,
+                                    want_lse=True)
+        outs[kernel], lses[kernel] = out, res[1]
+    np.testing.assert_allclose(lses["fsa"], lses["fsa_faithful"],
+                               atol=1e-5, rtol=1e-5)
+    np.testing.assert_allclose(outs["fsa"], outs["fsa_faithful"],
+                               atol=1e-5, rtol=1e-5)
+    # token 0 of each KV head attends only key 0 (always selected block 0):
+    # its lse must be finite; a row with an all-invalid selection gets +1e30
+    idx0 = jnp.zeros((64, 2, 3), jnp.int32)
+    valid0 = jnp.zeros((64, 2, 3), bool)
+    _, res0 = ab._selected_run((cfg, "fsa"), q, k, v, idx0, valid0,
+                               want_lse=True)
+    assert np.all(np.asarray(res0[1]) >= 1e29)
+
+
+@pytest.mark.parametrize("causal,window,n", [(True, None, 96),
+                                             (True, None, 100),
+                                             (False, None, 96),
+                                             (True, 24, 96)])
+def test_flash_gradients_match_oracle(causal, window, n):
+    """Fused flash backward (dq/dkv kernels, recomputed from (out, lse)) vs
+    grad of the dense oracle — full, non-causal, sliding, and ragged N."""
+    ks = jax.random.split(jax.random.PRNGKey(10), 3)
+    h, h_k, d = 4, 2, 32
+    q = jax.random.normal(ks[0], (n, h, d))
+    k = jax.random.normal(ks[1], (n, h_k, d))
+    v = jax.random.normal(ks[2], (n, h_k, d))
+    cfg = NSAConfig(q_block_size=32)
+
+    def f(q, k, v):
+        if window is None:
+            out = ops.full_attention(q, k, v, cfg, causal=causal)
+        else:
+            out = ops.sliding_attention(q, k, v, window, cfg)
+        return (out ** 2).sum()
+
+    def f_ref(q, k, v):
+        return (ref.flash_ref(q, k, v, causal=causal, window=window) ** 2).sum()
+
+    grads = jax.grad(f, argnums=(0, 1, 2))(q, k, v)
+    g_ref = jax.grad(f_ref, argnums=(0, 1, 2))(q, k, v)
+    for a, b in zip(grads, g_ref):
         np.testing.assert_allclose(a, b, atol=5e-5, rtol=5e-5)
 
 
