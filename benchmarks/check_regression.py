@@ -69,7 +69,9 @@ def _serve_metrics(doc: dict) -> tuple:
     noise floor means the same thing for kernel and serve documents.
     """
     r = doc["results"]
-    scale = {"decode_ms_tick": 1e3, "mean_latency_s": 1e6, "mean_ttft_s": 1e6}
+    scale = {"decode_ms_tick": 1e3, "mean_latency_s": 1e6, "mean_ttft_s": 1e6,
+             "ttft_p50_s": 1e6, "ttft_p95_s": 1e6,
+             "e2e_p50_s": 1e6, "e2e_p95_s": 1e6}
     lat = {k: float(r[k]) * s for k, s in scale.items() if r.get(k)}
     thr = {k: float(r[k]) for k in ("decode_tok_s", "prefill_tok_s")
            if r.get(k)}

@@ -2,9 +2,11 @@
 
 A Poisson-ish open-loop workload: prompts with lengths drawn from a range
 are released over engine ticks (admission over time, not one up-front
-batch), exercising chunked prefill, per-slot positions, slot recycling and
-page reclamation.  Reports tokens/sec (decode + prefill), latency, and
-page-pool utilization.
+batch), exercising the fused mixed tick (chunked prefill co-scheduled with
+decode), per-slot positions, slot recycling and page reclamation.  Reports
+tokens/sec (decode + prefill), per-request TTFT / end-to-end latency
+percentiles (p50/p95) from the corrected per-request timestamps, and
+raw + compressed page-pool utilization.
 
 Run:  PYTHONPATH=src python benchmarks/serve_bench.py --arch codeqwen1.5-7b
 
@@ -28,12 +30,17 @@ from repro.configs import get_config, reduced
 from repro.serving import Engine
 
 
+def _pctl(values, q):
+    return float(np.percentile(values, q)) if values else 0.0
+
+
 def run_workload(cfg, *, slots, n_requests, min_prompt, max_prompt, new_tokens,
                  release_every, prefill_chunk=None, seed=0, quiet=False,
-                 backend=None):
+                 backend=None, fused=True, prefill_token_budget=None):
     """Release requests gradually; drive the engine until drained."""
     eng = Engine(cfg, n_slots=slots, max_len=max_prompt + new_tokens + 8,
-                 prefill_chunk=prefill_chunk, backend=backend)
+                 prefill_chunk=prefill_chunk, backend=backend, fused=fused,
+                 prefill_token_budget=prefill_token_budget)
     rng = np.random.default_rng(seed)
     pending = [rng.integers(0, cfg.vocab, size=(int(rng.integers(
         min_prompt, max_prompt + 1)),)) for _ in range(n_requests)]
@@ -48,6 +55,9 @@ def run_workload(cfg, *, slots, n_requests, min_prompt, max_prompt, new_tokens,
     wall = time.time() - t0
 
     s = eng.summary()
+    # per-request latencies from the corrected timestamps: first_token_t is
+    # stamped per request AFTER its first token is on host, never one shared
+    # pre-sync stamp for an admission batch
     lat = [r.finish_t - r.submit_t for r in eng.scheduler.finished]
     ttft = [r.first_token_t - r.submit_t for r in eng.scheduler.finished
             if r.first_token_t]
@@ -56,25 +66,39 @@ def run_workload(cfg, *, slots, n_requests, min_prompt, max_prompt, new_tokens,
         "prompt_lens": [len(r.prompt) for r in reqs],
         "decode_backend": resolve(
             eng.cfg.nsa, AttentionRequest(mode="paged_decode", paged=True)).name,
+        "fused": fused,
+        "mixed_ticks": s["mixed_ticks"],
         "wall_s": wall,
         "decode_tok_s": s["decode_tokens_per_s"],
         "prefill_tok_s": s["prefill_tokens_per_s"],
         "decode_ms_tick": s["decode_ms_per_tick"],
         "peak_page_util": s["peak_page_util"],
+        "peak_cmp_page_util": s["peak_cmp_page_util"],
         "mean_latency_s": float(np.mean(lat)) if lat else 0.0,
         "mean_ttft_s": float(np.mean(ttft)) if ttft else 0.0,
+        "ttft_p50_s": _pctl(ttft, 50),
+        "ttft_p95_s": _pctl(ttft, 95),
+        "e2e_p50_s": _pctl(lat, 50),
+        "e2e_p95_s": _pctl(lat, 95),
         "total_new_tokens": s["decoded_tokens"] + len(reqs),
     }
     if not quiet:
         print(f"[serve_bench] {len(reqs)} reqs, prompts "
               f"{min(out['prompt_lens'])}..{max(out['prompt_lens'])}, "
-              f"slots={slots}, wall {wall:.2f}s")
+              f"slots={slots}, wall {wall:.2f}s"
+              f" ({'fused' if fused else 'sequential'} ticks,"
+              f" {s['mixed_ticks']} mixed)")
         print(f"  decode   {out['decode_tok_s']:8.1f} tok/s  "
               f"({out['decode_ms_tick']:.1f} ms/batched-tick)")
         print(f"  prefill  {out['prefill_tok_s']:8.1f} tok/s")
-        print(f"  latency  {out['mean_latency_s']*1e3:8.1f} ms mean  "
-              f"(ttft {out['mean_ttft_s']*1e3:.1f} ms)")
-        print(f"  pages    {out['peak_page_util']:8.1%} peak pool utilization")
+        print(f"  ttft     {out['ttft_p50_s']*1e3:8.1f} ms p50  "
+              f"{out['ttft_p95_s']*1e3:8.1f} ms p95  "
+              f"(mean {out['mean_ttft_s']*1e3:.1f} ms)")
+        print(f"  e2e      {out['e2e_p50_s']*1e3:8.1f} ms p50  "
+              f"{out['e2e_p95_s']*1e3:8.1f} ms p95  "
+              f"(mean {out['mean_latency_s']*1e3:.1f} ms)")
+        print(f"  pages    {out['peak_page_util']:8.1%} raw / "
+              f"{out['peak_cmp_page_util']:.1%} cmp peak pool utilization")
     return out
 
 
@@ -97,6 +121,12 @@ def main():
                     help="decode via the gather reference instead of the "
                          "Pallas paged-decode kernel (alias for "
                          "--backend paged_gather)")
+    ap.add_argument("--sequential", action="store_true",
+                    help="run the legacy two-phase engine (full prefill, "
+                         "then decode) instead of the fused mixed tick")
+    ap.add_argument("--prefill-token-budget", type=int, default=None,
+                    help="cap on prefill chunk tokens per fused tick "
+                         "(admission throttles to bound decode latency)")
     ap.add_argument("--json-out", default=None,
                     help="write a BENCH_serve.json trajectory point here")
     args = ap.parse_args()
@@ -109,7 +139,9 @@ def main():
                        new_tokens=args.new_tokens,
                        release_every=args.release_every,
                        backend="paged_gather" if args.no_kernel
-                       else args.backend)
+                       else args.backend,
+                       fused=not args.sequential,
+                       prefill_token_budget=args.prefill_token_budget)
     if args.json_out:
         write_results(args.json_out, "serve_bench",
                       dict(out, arch=args.arch, full_size=args.full_size))

@@ -84,13 +84,37 @@ def collate(points) -> dict:
     return out
 
 
-def markdown(traj: dict) -> str:
+def _mermaid_chart(bench: str, metric: str, values: list) -> list:
+    """One mermaid xychart-beta block (GitHub step summaries render these
+    natively — a plot with zero plotting dependencies).  ``None`` gaps are
+    carried forward so the line stays drawable."""
+    pts, last = [], None
+    for v in values:
+        last = v if v is not None else last
+        pts.append(last)
+    pts = [p for p in pts if p is not None]
+    if len(pts) < 2:
+        return []
+    return [
+        "```mermaid",
+        "xychart-beta",
+        f'    title "{bench}: {metric}"',
+        f'    x-axis "commit" [{", ".join(str(i + 1) for i in range(len(pts)))}]',
+        f'    y-axis "{metric}"',
+        f'    line [{", ".join(f"{p:.2f}" for p in pts)}]',
+        "```",
+        "",
+    ]
+
+
+def markdown(traj: dict, *, plot: bool = False, plot_limit: int = 6) -> str:
     lines = ["# Bench trajectory", ""]
     for bench, data in sorted(traj.items()):
         n = len(data["points"])
         lines += [f"## {bench} ({n} point{'s' * (n != 1)})", "",
                   "| metric | first | last | drift |",
                   "|---|---:|---:|---:|"]
+        drifts = {}
         for metric, values in sorted(data["series"].items()):
             present = [v for v in values if v is not None]
             if not present:
@@ -100,7 +124,14 @@ def markdown(traj: dict) -> str:
             gap = "" if len(present) == len(values) else " (gaps)"
             lines.append(f"| {metric} | {first:.1f} | {last:.1f} "
                          f"| {drift}{gap} |")
+            if first:
+                drifts[metric] = abs(last / first - 1)
         lines.append("")
+        if plot and n >= 2:
+            # chart the most-drifted metrics — the ones worth eyeballing
+            top = sorted(drifts, key=drifts.get, reverse=True)[:plot_limit]
+            for metric in top:
+                lines += _mermaid_chart(bench, metric, data["series"][metric])
     return "\n".join(lines) + "\n"
 
 
@@ -112,6 +143,10 @@ def main(argv=None) -> int:
     ap.add_argument("--json-out", default="BENCH_trajectory.json")
     ap.add_argument("--md-out", default=None,
                     help="also write the markdown drift table here")
+    ap.add_argument("--plot", action="store_true",
+                    help="append mermaid xychart blocks (rendered natively "
+                         "by GitHub step summaries) for the most-drifted "
+                         "metrics of each bench")
     args = ap.parse_args(argv)
 
     points = load_points(args.inputs)
@@ -124,7 +159,7 @@ def main(argv=None) -> int:
     print(f"[trajectory] wrote {args.json_out} "
           f"({sum(len(d['points']) for d in traj.values())} points, "
           f"{len(traj)} benches)", file=sys.stderr)
-    md = markdown(traj)
+    md = markdown(traj, plot=args.plot)
     if args.md_out:
         pathlib.Path(args.md_out).write_text(md)
         print(f"[trajectory] wrote {args.md_out}", file=sys.stderr)

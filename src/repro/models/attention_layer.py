@@ -291,17 +291,22 @@ def init_paged_attn_cache(cfg, num_pages: int, num_cmp_pages: int):
     return cache
 
 
-def _paged_emit_cmp(p, cfg, layer_cache, tables, pos):
+def _paged_emit_cmp(p, cfg, layer_cache, tables, pos, active=None):
     """Per-slot stride-boundary compressed-token emission on paged storage.
 
     pos: (B,) position of the token just written; emits cmp token
     ``j = (pos+1-l)/st`` for slots that crossed a boundary, writing it through
-    the compressed-page table (dump page 0 otherwise).
+    the compressed-page table (dump page 0 otherwise).  ``active`` (B,) bool
+    additionally masks slots whose decode row is inert this dispatch (fused
+    mixed tick: slots mid-prefill carry REAL page tables, so their ride-along
+    emission must be forced onto the dump page).
     """
     nsa = cfg.nsa
     l, st = nsa.cmp_block_size, nsa.cmp_stride
     new_len = pos + 1
     has_new = (new_len >= l) & ((new_len - l) % st == 0)           # (B,)
+    if active is not None:
+        has_new &= active
     j = jnp.maximum((new_len - l) // st, 0)
     rows = (j * st)[:, None] + jnp.arange(l)[None, :]              # (B, l)
     win_k = jax.vmap(gather_rows, in_axes=(None, 0, 0))(
@@ -320,11 +325,15 @@ def _paged_emit_cmp(p, cfg, layer_cache, tables, pos):
     return layer_cache
 
 
-def paged_attention_decode(p, x_t, layer_cache, tables, pos, cfg):
+def paged_attention_decode(p, x_t, layer_cache, tables, pos, cfg, *,
+                           active=None):
     """One decode step on paged KV storage (continuous batching).
 
     x_t: (B, D); pos: (B,) per-slot absolute positions;
     tables: {"page_table": (B, max_pages), "cmp_table": (B, max_cmp_pages)}.
+    ``active`` (B,) bool masks rows that must ride along inertly (all writes
+    to the dump page) — the fused mixed tick passes the decode-slot mask so
+    slots mid-prefill, which carry real page tables, stay untouched.
 
     The NSA path reads only the pages its branches touch: compressed pages,
     the top-T selected pages (page == NSA block), and the sliding-window
@@ -335,14 +344,18 @@ def paged_attention_decode(p, x_t, layer_cache, tables, pos, cfg):
     b = x_t.shape[0]
     pos = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (b,))
     q, k, v = _qkv(p, x_t[:, None, :], cfg, pos[:, None])
+    kv_valid = None if active is None else active[:, None]
     layer_cache = dict(layer_cache)
     layer_cache["k_pages"] = scatter_rows(
-        layer_cache["k_pages"], tables["page_table"], pos[:, None], k)
+        layer_cache["k_pages"], tables["page_table"], pos[:, None], k,
+        valid=kv_valid)
     layer_cache["v_pages"] = scatter_rows(
-        layer_cache["v_pages"], tables["page_table"], pos[:, None], v)
+        layer_cache["v_pages"], tables["page_table"], pos[:, None], v,
+        valid=kv_valid)
 
     if cfg.attention == "nsa":
-        layer_cache = _paged_emit_cmp(p, cfg, layer_cache, tables, pos)
+        layer_cache = _paged_emit_cmp(p, cfg, layer_cache, tables, pos,
+                                      active=active)
         gates = gating.apply_gates(p["nsa"], x_t)                  # (B,h,3)
         n_cmp_max = tables["cmp_table"].shape[1] * cfg.nsa.block_size
         cmp_rows = jnp.arange(n_cmp_max)

@@ -374,6 +374,63 @@ def lm_paged_prefill_chunks(params, cache, tokens_c, t0, length, tables, cfg):
     return _head(params, x, cfg), cache
 
 
+def lm_paged_mixed_step(params, cache, pf_tokens, pf_t0, pf_len,
+                        dec_tokens, dec_pos, dec_active, tables, cfg):
+    """ONE fused dispatch per engine tick: a bounded prefill chunk for
+    admitting slots AND one decode token for active slots (vLLM-style
+    continuous batching — decode never stalls behind a long co-admitted
+    prompt's chunk loop).
+
+    pf_tokens: (B, C) int32 chunk rows at absolute positions
+    [pf_t0_b, pf_t0_b + C); pf_len: (B,) true prompt lengths (``pf_len == 0``
+    rows are fully inert — slots not prefilling this tick).
+    dec_tokens/dec_pos: (B,) decode operands; dec_active: (B,) bool — rows
+    with ``False`` (slots mid-prefill or free) ride along with all writes
+    routed to the dump page.  A slot is never both (disjoint masks), so the
+    two sub-steps share ``tables`` and the per-layer page pools safely.
+
+    Returns (pf_logits (B, C, V), dec_logits (B, V), cache).
+    """
+    x_pf = params["embed"][pf_tokens]                       # (B, C, D)
+    x_dec = params["embed"][dec_tokens]                     # (B, D)
+
+    def body(carry, args):
+        x_pf, x_dec = carry
+        p_l, c_l = args
+        # prefill sub-step (chunk rows; inert where pf_len == 0)
+        h = rms_norm(x_pf, p_l["ln1"], cfg.norm_eps)
+        h, c_l = attn.paged_attention_prefill_chunks(
+            p_l["attn"], h, c_l, tables, pf_t0, pf_len, cfg)
+        x_pf = x_pf + h
+        h = rms_norm(x_pf, p_l["ln2"], cfg.norm_eps)
+        if cfg.moe is not None:
+            h, _ = moe.apply_moe(p_l["moe"], h, cfg)
+        else:
+            h = apply_mlp(p_l["mlp"], h, cfg.mlp)
+        x_pf = x_pf + h
+        # decode sub-step (one token per active slot)
+        h = rms_norm(x_dec, p_l["ln1"], cfg.norm_eps)
+        h, c_l = attn.paged_attention_decode(p_l["attn"], h, c_l, tables,
+                                             dec_pos, cfg, active=dec_active)
+        x_dec = x_dec + h
+        h = rms_norm(x_dec, p_l["ln2"], cfg.norm_eps)
+        if cfg.moe is not None:
+            h2, _ = moe.apply_moe(p_l["moe"], h[:, None, :], cfg)
+            h = h2[:, 0]
+        else:
+            h = apply_mlp(p_l["mlp"], h, cfg.mlp)
+        x_dec = x_dec + h
+        return (x_pf, x_dec), c_l
+
+    (x_pf, x_dec), cl = jax.lax.scan(body, (x_pf, x_dec),
+                                     (params["layers"], cache["layers"]))
+    cache = dict(cache, layers=cl)
+    x_pf = rms_norm(x_pf, params["final_norm"], cfg.norm_eps)
+    x_dec = rms_norm(x_dec, params["final_norm"], cfg.norm_eps)
+    return (_head(params, x_pf, cfg),
+            _head(params, x_dec[:, None], cfg)[:, 0], cache)
+
+
 def lm_paged_prefill_chunk(params, cache, tokens_c, t0, length, tables, cfg):
     """Single-slot chunked prefill (compat wrapper over the batched path).
 

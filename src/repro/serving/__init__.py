@@ -1,15 +1,19 @@
 """repro.serving — paged NSA KV-cache + continuous-batching serving.
 
 Layout:
-  pages.py      fixed-size KV page pool + per-slot page tables
-  cache.py      PagedNSACache: raw-token and compressed-token pages
-  scheduler.py  admission queue, slot recycling, page reclamation
-  engine.py     chunked prefill + batched decode over per-slot positions
+  pages.py         fixed-size KV page pool + per-slot page tables
+  cache.py         PagedNSACache: raw-token and compressed-token pages
+  scheduler.py     admission queue (token-budget policy), slot recycling,
+                   page reclamation
+  engine.py        fused mixed tick: chunked prefill co-scheduled with
+                   batched decode over per-slot positions, one dispatch/tick
+  async_engine.py  asyncio request loop with per-request token streaming
 """
+from repro.serving.async_engine import AsyncEngine
 from repro.serving.cache import PagedNSACache
 from repro.serving.engine import Engine
 from repro.serving.pages import PagePool, PageTable
 from repro.serving.scheduler import Request, Scheduler
 
-__all__ = ["Engine", "PagePool", "PageTable", "PagedNSACache", "Request",
-           "Scheduler"]
+__all__ = ["AsyncEngine", "Engine", "PagePool", "PageTable", "PagedNSACache",
+           "Request", "Scheduler"]

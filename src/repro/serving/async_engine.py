@@ -1,0 +1,114 @@
+"""Async request loop over the fused serving engine: per-request token
+streaming with corrected latency stamps.
+
+``AsyncEngine`` wraps an ``Engine`` in an asyncio service loop: callers
+``await generate(...)`` (full output) or iterate ``stream(...)`` (tokens as
+they materialize), from any number of concurrent coroutines.  One background
+task drives ``engine.step()`` — each step is a fused mixed tick, so a newly
+submitted prompt's chunked prefill overlaps with every in-flight request's
+decode — and the engine's ``on_token`` / ``on_finish`` hooks fan tokens out
+to per-request asyncio queues.
+
+``engine.step()`` runs in the default executor (a thread), keeping the event
+loop responsive while jax blocks; hook callbacks fire on that worker thread
+and hop back to the loop via ``call_soon_threadsafe``.  The loop task drains
+on idle and restarts on the next submission, so an ``AsyncEngine`` can serve
+bursts indefinitely.
+
+Example::
+
+    aeng = AsyncEngine(Engine(cfg, n_slots=4))
+    async for tok in aeng.stream(prompt, max_new=32):
+        ...                         # tokens arrive as the engine emits them
+    req = await aeng.generate(prompt, max_new=32)   # or collect everything
+"""
+from __future__ import annotations
+
+import asyncio
+
+from repro.serving.engine import Engine
+from repro.serving.scheduler import Request
+
+_DONE = object()        # stream sentinel: request finished
+
+
+class AsyncEngine:
+    """Asyncio front-end: concurrent submissions, per-request streaming."""
+
+    def __init__(self, engine: Engine):
+        self.engine = engine
+        engine.on_token = self._on_token       # worker-thread callbacks
+        engine.on_finish = self._on_finish
+        self._queues: dict[int, asyncio.Queue] = {}
+        self._loop: asyncio.AbstractEventLoop | None = None
+        self._task: asyncio.Task | None = None
+
+    # ------------------------------------------------- engine-thread hooks
+    def _post(self, rid: int, item) -> None:
+        q = self._queues.get(rid)
+        if q is not None and self._loop is not None:
+            self._loop.call_soon_threadsafe(q.put_nowait, item)
+
+    def _on_token(self, req: Request, tok: int) -> None:
+        self._post(req.rid, tok)
+
+    def _on_finish(self, req: Request) -> None:
+        self._post(req.rid, _DONE)
+
+    # ------------------------------------------------------- service loop
+    def _ensure_running(self) -> None:
+        self._loop = asyncio.get_running_loop()
+        if self._task is None or self._task.done():
+            self._task = self._loop.create_task(self._drive())
+
+    async def _drive(self) -> None:
+        loop = asyncio.get_running_loop()
+        try:
+            while not self.engine.scheduler.idle():
+                await loop.run_in_executor(None, self.engine.step)
+        except Exception as e:              # engine died: fail all streams
+            for rid in list(self._queues):
+                self._post(rid, e)
+            raise
+
+    # ------------------------------------------------------------- intake
+    async def stream(self, prompt, max_new: int = 16,
+                     eos_id: int | None = None):
+        """Submit one request; yield its tokens as they materialize."""
+        req = self.engine.submit(prompt, max_new=max_new, eos_id=eos_id)
+        q: asyncio.Queue = asyncio.Queue()
+        self._queues[req.rid] = q
+        self._ensure_running()
+        try:
+            while True:
+                item = await q.get()
+                if item is _DONE:
+                    return
+                if isinstance(item, Exception):
+                    raise item
+                yield item
+        finally:
+            self._queues.pop(req.rid, None)
+
+    async def generate(self, prompt, max_new: int = 16,
+                       eos_id: int | None = None) -> Request:
+        """Submit one request and await its completion (full ``Request``,
+        with per-request ``submit_t``/``first_token_t``/``finish_t``)."""
+        req = self.engine.submit(prompt, max_new=max_new, eos_id=eos_id)
+        q: asyncio.Queue = asyncio.Queue()
+        self._queues[req.rid] = q
+        self._ensure_running()
+        try:
+            while True:
+                item = await q.get()
+                if item is _DONE:
+                    return req
+                if isinstance(item, Exception):
+                    raise item
+        finally:
+            self._queues.pop(req.rid, None)
+
+    async def drain(self) -> None:
+        """Wait until all in-flight and queued requests have finished."""
+        if self._task is not None:
+            await self._task

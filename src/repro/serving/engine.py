@@ -1,17 +1,29 @@
 """Continuous-batching serving engine on the paged NSA KV-cache.
 
 Replaces the old fixed-batch loop in ``launch/serve.py``: prompts of any
-length are admitted as slots and pages free up, prefill streams ALL newly
-admitted prompts together through one fixed-shape batched chunk jit, and
-every engine tick decodes one token for all active slots at their own
-absolute positions (a (B,) position vector, not a shared scalar) in ONE
-batched dispatch — the Pallas paged-decode kernel
-(``kernels/paged_decode.py``) by default, which folds the slot batch into
-the MXU M dimension and reads KV through the page table at page granularity.
+length are admitted as slots and pages free up, and every engine tick is ONE
+fused dispatch (``transformer.lm_paged_mixed_step``) that advances each
+prefilling slot by one bounded chunk AND decodes one token for every active
+slot at its own absolute position (a (B,) position vector, not a shared
+scalar).  Decode therefore never stalls behind a long co-admitted prompt's
+chunk loop — vLLM-style continuous batching — and the per-tick prefill work
+is bounded by the scheduler's token budget.  The decode sub-step runs the
+Pallas paged-decode kernel (``kernels/paged_decode.py``) by default, which
+folds the slot batch into the MXU M dimension and reads KV through the page
+table at page granularity.
 
 The NSA decode tick reads only the pages its branches touch — compressed
 rows, the top-T selected pages and the sliding window — so a tick is
 O(N/stride + T·B_K + W) per slot regardless of context depth.
+
+``fused=False`` keeps the previous sequential engine (prefill the whole
+admission batch to completion, then decode) — the A/B reference for the
+fused tick's token-identical-outputs guarantee.
+
+Latency accounting: ``first_token_t`` is stamped PER REQUEST, after that
+request's first token has been materialized on host (the blocking argmax
+sync is inside the stamp, and inside ``prefill_s``) — never one shared
+pre-sync timestamp for a whole admission batch.
 """
 from __future__ import annotations
 
@@ -38,7 +50,9 @@ class Engine:
                  num_pages: int | None = None, prefill_chunk: int | None = None,
                  params=None, seed: int = 0, backend: str | None = None,
                  use_kernel: bool | None = None,
-                 admit_limit: int | None = None):
+                 admit_limit: int | None = None,
+                 prefill_token_budget: int | None = None,
+                 fused: bool = True):
         if cfg.family not in SUPPORTED_FAMILIES:
             raise NotImplementedError(
                 f"paged serving supports families {SUPPORTED_FAMILIES}, got "
@@ -67,11 +81,23 @@ class Engine:
         self.prefill_chunk = min(prefill_chunk or 4 * p,
                                  self.cache.max_pages * p)
         self.scheduler = Scheduler(self.cache, self.prefill_chunk)
+        self.scheduler.on_release = self._on_release
         self.n_slots = n_slots
         # caps one step's admission batch (everything admitted together is
-        # prefilled together, so this bounds how many short prompts a long
-        # co-admitted one can stall); None = fill all free slots
+        # prefilled together in sequential mode, so this bounds how many
+        # short prompts a long co-admitted one can stall); None = fill all
+        # free slots
         self.admit_limit = admit_limit
+        # fused mode: cap on prefill chunk tokens processed per tick
+        # (scheduler admission enforces it; None = no cap beyond slot count)
+        self.prefill_token_budget = prefill_token_budget
+        self.fused = fused
+        # per-request streaming hooks: on_token(req, tok) fires after the
+        # token is on host (and appended to req.out); on_finish(req) after
+        # the slot is recycled.  Set by AsyncEngine or any caller.
+        self.on_token = None
+        self.on_finish = None
+        self._pf_pos: dict[int, int] = {}    # slot -> next chunk offset
 
         # cfg is closed over (static); cache buffers are donated per call
         self._decode = jax.jit(
@@ -84,10 +110,18 @@ class Engine:
                 transformer.lm_paged_prefill_chunks(params, data, toks, t0,
                                                     length, tables, cfg),
             donate_argnums=(1,))
+        self._mixed = jax.jit(
+            lambda params, data, pf_toks, pf_t0, pf_len, dec_toks, dec_pos,
+            dec_active, tables:
+                transformer.lm_paged_mixed_step(
+                    params, data, pf_toks, pf_t0, pf_len, dec_toks, dec_pos,
+                    dec_active, tables, cfg),
+            donate_argnums=(1,))
         self._last_tokens = np.zeros((n_slots,), np.int32)
         self.stats = {"decoded_tokens": 0, "decode_ticks": 0, "decode_s": 0.0,
                       "prefill_tokens": 0, "prefill_s": 0.0,
-                      "peak_page_util": 0.0}
+                      "mixed_ticks": 0, "mixed_s": 0.0,
+                      "peak_page_util": 0.0, "peak_cmp_page_util": 0.0}
 
     # ------------------------------------------------------------- intake
     def submit(self, prompt, max_new: int = 16, eos_id: int | None = None
@@ -95,13 +129,37 @@ class Engine:
         return self.scheduler.submit(
             Request(prompt=np.asarray(prompt), max_new=max_new, eos_id=eos_id))
 
+    def _on_release(self, req: Request) -> None:
+        """Slot recycled: drop stale per-slot decode state so the freed
+        slot's ride-along decode rows are reproducible (token 0 on the dump
+        page) and a later occupant never inherits the old last token."""
+        self._last_tokens[req.slot] = 0
+        self._pf_pos.pop(req.slot, None)
+        if self.on_finish is not None:
+            self.on_finish(req)
+
+    def _emit(self, req: Request, tok: int) -> None:
+        req.out.append(tok)
+        self._last_tokens[req.slot] = tok
+        if self.on_token is not None:
+            self.on_token(req, tok)
+
+    def _track_util(self) -> dict:
+        util = self.cache.utilization()
+        self.stats["peak_page_util"] = max(self.stats["peak_page_util"],
+                                           util["raw"])
+        self.stats["peak_cmp_page_util"] = max(
+            self.stats["peak_cmp_page_util"], util["cmp"])
+        return util
+
     # ------------------------------------------------------------ prefill
     def _prefill_requests(self, reqs: list[Request]) -> None:
-        """Stream ALL newly admitted prompts together through the fixed-shape
-        batched chunk jit: one dispatch per chunk step for the whole
-        admission batch (padded to ``n_slots`` rows so the jit never
-        recompiles).  Slots whose (shorter) prompt is already fully written
-        ride along inertly — their writes land on the dump page."""
+        """Sequential-mode prefill: stream ALL newly admitted prompts
+        together through the fixed-shape batched chunk jit, one dispatch per
+        chunk step for the whole admission batch (padded to ``n_slots`` rows
+        so the jit never recompiles).  Slots whose (shorter) prompt is
+        already fully written ride along inertly — their writes land on the
+        dump page."""
         if not reqs:
             return
         t_start = time.time()
@@ -129,13 +187,11 @@ class Engine:
                 if kc == padded[i] // c - 1:     # chunk with the last token
                     last_logits[i] = logits[i, (lens[i] - 1) - start,
                                             :self.cfg.vocab]
-        t_first = time.time()
         for i, r in enumerate(reqs):
             self.cache.lengths[r.slot] = lens[i]
-            tok = int(jnp.argmax(last_logits[i]))
-            r.out.append(tok)
-            r.first_token_t = t_first
-            self._last_tokens[r.slot] = tok
+            tok = int(jnp.argmax(last_logits[i]))   # blocking host sync
+            self._emit(r, tok)
+            r.first_token_t = time.time()    # per request, post-sync
             self.stats["prefill_tokens"] += lens[i]
         self.stats["prefill_s"] += time.time() - t_start
 
@@ -165,20 +221,114 @@ class Engine:
                          np.int32)
         for req in self.scheduler.active:
             s = req.slot
-            req.out.append(int(nxt[s]))
-            self._last_tokens[s] = nxt[s]
+            self._emit(req, int(nxt[s]))
             self.cache.lengths[s] += 1
             self.stats["decoded_tokens"] += 1
         self.stats["decode_ticks"] += 1
         self.stats["decode_s"] += time.time() - t0
 
-    def step(self) -> dict:
-        """One engine iteration: admit + prefill, decode, recycle slots."""
+    # --------------------------------------------------------- fused tick
+    def _prefill_tokens_in_flight(self) -> int:
+        """Chunk tokens the CURRENT prefilling slots will consume next tick
+        (the scheduler's admission budget adds to this)."""
+        total = 0
+        for req in self.scheduler.active:
+            t0 = self._pf_pos.get(req.slot)
+            if t0 is not None:
+                total += min(self.prefill_chunk, len(req.prompt) - t0)
+        return total
+
+    def _step_fused(self) -> dict:
+        """ONE fused dispatch: a bounded prefill chunk for admitting slots +
+        one decode token for active slots, co-scheduled."""
+        admitted = self.scheduler.admit(
+            self.admit_limit, token_budget=self.prefill_token_budget,
+            tokens_in_flight=self._prefill_tokens_in_flight())
+        for r in admitted:
+            self._pf_pos[r.slot] = 0
+        util = self._track_util()
+
+        c, bsz = self.prefill_chunk, self.n_slots
+        prefilling = [r for r in self.scheduler.active
+                      if r.slot in self._pf_pos]
+        decoding = [r for r in self.scheduler.active
+                    if r.slot not in self._pf_pos]
+        if not prefilling and not decoding:
+            return {"admitted": admitted, "finished": [], "active": 0,
+                    "pending": self.scheduler.pending, "page_util": util,
+                    "prefill_chunk_tokens": 0}
+
+        t_tick = time.time()
+        chunk_tokens = 0
+        if prefilling:
+            pf_toks = np.zeros((bsz, c), np.int32)
+            pf_t0 = np.zeros((bsz,), np.int32)
+            pf_len = np.zeros((bsz,), np.int32)   # 0 rows are inert
+            for r in prefilling:
+                s, t0 = r.slot, self._pf_pos[r.slot]
+                n = min(c, len(r.prompt) - t0)
+                pf_toks[s, :n] = r.prompt[t0:t0 + n]
+                pf_t0[s], pf_len[s] = t0, len(r.prompt)
+                chunk_tokens += n
+            dec_active = np.zeros((bsz,), bool)
+            for r in decoding:
+                dec_active[r.slot] = True
+            pf_logits, dec_logits, self.cache.data = self._mixed(
+                self.params, self.cache.data, jnp.asarray(pf_toks),
+                jnp.asarray(pf_t0), jnp.asarray(pf_len),
+                jnp.asarray(self._last_tokens),
+                jnp.asarray(self.cache.lengths, jnp.int32),
+                jnp.asarray(dec_active), self.cache.device_tables())
+        else:   # steady-state decode: skip the (B, C) prefill sub-step
+            dec_logits, self.cache.data = self._decode(
+                self.params, self.cache.data, jnp.asarray(self._last_tokens),
+                jnp.asarray(self.cache.lengths, jnp.int32),
+                self.cache.device_tables())
+            pf_logits = None
+
+        # prefill progress: advance each slot one chunk; a slot whose chunk
+        # covered its last prompt token materializes its FIRST token now
+        for r in prefilling:
+            s, t0 = r.slot, self._pf_pos[r.slot]
+            self.stats["prefill_tokens"] += min(c, len(r.prompt) - t0)
+            if t0 + c >= len(r.prompt):
+                tok = int(jnp.argmax(                # blocking host sync
+                    pf_logits[s, (len(r.prompt) - 1) - t0, :self.cfg.vocab]))
+                del self._pf_pos[s]
+                self.cache.lengths[s] = len(r.prompt)
+                self._emit(r, tok)
+                r.first_token_t = time.time()    # per request, post-sync
+            else:
+                self._pf_pos[s] = t0 + c
+        if decoding:
+            nxt = np.asarray(jnp.argmax(dec_logits[:, :self.cfg.vocab],
+                                        axis=-1), np.int32)
+            for r in decoding:
+                s = r.slot
+                self._emit(r, int(nxt[s]))
+                self.cache.lengths[s] += 1
+                self.stats["decoded_tokens"] += 1
+
+        dt = time.time() - t_tick
+        if prefilling and decoding:
+            self.stats["mixed_ticks"] += 1
+            self.stats["mixed_s"] += dt
+        elif decoding:
+            self.stats["decode_ticks"] += 1
+            self.stats["decode_s"] += dt
+        else:
+            self.stats["prefill_s"] += dt
+        finished = self._finish_ready()
+        return {"admitted": admitted, "finished": finished,
+                "active": len(self.scheduler.active),
+                "pending": self.scheduler.pending, "page_util": util,
+                "prefill_chunk_tokens": chunk_tokens}
+
+    def _step_sequential(self) -> dict:
+        """Legacy two-phase iteration: admit + full prefill, then decode."""
         admitted = self.scheduler.admit(self.admit_limit)
         self._prefill_requests(admitted)
-        util = self.cache.utilization()
-        self.stats["peak_page_util"] = max(self.stats["peak_page_util"],
-                                           util["raw"])
+        util = self._track_util()
         finished = self._finish_ready()       # requests done at prefill
         if self.scheduler.active:
             self._decode_tick()
@@ -186,6 +336,10 @@ class Engine:
         return {"admitted": admitted, "finished": finished,
                 "active": len(self.scheduler.active),
                 "pending": self.scheduler.pending, "page_util": util}
+
+    def step(self) -> dict:
+        """One engine iteration (fused mixed tick unless ``fused=False``)."""
+        return self._step_fused() if self.fused else self._step_sequential()
 
     def run(self, requests=None, *, max_steps: int | None = None) -> dict:
         """Drive until all traffic (queued + active) has drained."""
@@ -202,12 +356,19 @@ class Engine:
 
     def summary(self) -> dict:
         s = self.stats
+        # overlapped accounting: during a mixed tick BOTH streams progress,
+        # so each stream's throughput window includes mixed time
+        decode_window = s["decode_s"] + s["mixed_s"]
+        prefill_window = s["prefill_s"] + s["mixed_s"]
+        decode_ticks = s["decode_ticks"] + s["mixed_ticks"]
         return {
             "requests_finished": len(self.scheduler.finished),
             "decoded_tokens": s["decoded_tokens"],
-            "decode_tokens_per_s": s["decoded_tokens"] / max(s["decode_s"], 1e-9),
-            "prefill_tokens_per_s": s["prefill_tokens"] / max(s["prefill_s"], 1e-9),
-            "decode_ms_per_tick": 1e3 * s["decode_s"] / max(s["decode_ticks"], 1),
+            "decode_tokens_per_s": s["decoded_tokens"] / max(decode_window, 1e-9),
+            "prefill_tokens_per_s": s["prefill_tokens"] / max(prefill_window, 1e-9),
+            "decode_ms_per_tick": 1e3 * decode_window / max(decode_ticks, 1),
+            "mixed_ticks": s["mixed_ticks"],
             "peak_page_util": s["peak_page_util"],
+            "peak_cmp_page_util": s["peak_cmp_page_util"],
             "outputs": {r.rid: list(r.out) for r in self.scheduler.finished},
         }

@@ -33,8 +33,8 @@ class Request:
     state: str = "queued"                   # queued | active | done
     slot: Optional[int] = None
     submit_t: float = dataclasses.field(default_factory=time.time)
-    first_token_t: Optional[float] = None
-    finish_t: Optional[float] = None
+    first_token_t: Optional[float] = None   # stamped per request, AFTER its
+    finish_t: Optional[float] = None        # first token is on host
 
     def __post_init__(self):
         self.prompt = np.asarray(self.prompt, np.int32).reshape(-1)
@@ -55,6 +55,10 @@ class Scheduler:
         self.queue: collections.deque[Request] = collections.deque()
         self.slots: list[Request | None] = [None] * cache.n_slots
         self.finished: list[Request] = []
+        # called with the request on release, after its slot/pages are freed
+        # — the engine hooks this to zero the slot's per-slot decode state
+        # (_last_tokens), so a recycled slot never inherits a stale token
+        self.on_release = None
 
     # ------------------------------------------------------------- intake
     def submit(self, req: Request) -> Request:
@@ -88,28 +92,49 @@ class Scheduler:
         padded = -(-len(req.prompt) // c) * c
         return max(padded, len(req.prompt) + req.max_new)
 
+    def chunk_tokens(self, req: Request) -> int:
+        """Prefill-chunk tokens one engine tick spends on this request (the
+        fused tick advances every prefilling slot by at most one chunk)."""
+        return min(self.prefill_chunk, len(req.prompt))
+
     # ---------------------------------------------------------- admission
-    def admit(self, limit: int | None = None) -> list[Request]:
+    def admit(self, limit: int | None = None, *,
+              token_budget: int | None = None,
+              tokens_in_flight: int = 0) -> list[Request]:
         """Move queued requests into free slots while pages allow (FIFO —
         no head-of-line bypass, so admission latency stays predictable).
 
-        Everything admitted on one call is prefilled TOGETHER by the
-        engine's batched chunk jit, so the returned list is the admission
-        batch; ``limit`` caps it (e.g. to bound the chunk count a single
-        long prompt imposes on co-admitted short ones)."""
+        ``limit`` caps the admission batch (e.g. to bound the chunk count a
+        single long prompt imposes on co-admitted short ones in the
+        sequential engine).
+
+        ``token_budget`` is the per-tick prefill token budget: admission
+        stops once ``tokens_in_flight`` (chunk tokens of requests already
+        mid-prefill, supplied by the engine) plus the next request's first
+        chunk would exceed it.  Because per-request chunk tokens only shrink
+        as prefill progresses, the invariant "prefill chunk tokens per tick
+        <= token_budget" then holds for every subsequent tick, which bounds
+        the decode latency a co-scheduled prefill can add.  A request is
+        always admitted when nothing is in flight (a budget below one chunk
+        must throttle, not wedge, the queue)."""
         admitted = []
+        in_flight = tokens_in_flight
         while self.queue and (limit is None or len(admitted) < limit):
             try:
                 slot = self.slots.index(None)
             except ValueError:
                 break
             req = self.queue[0]
+            if (token_budget is not None and in_flight > 0
+                    and in_flight + self.chunk_tokens(req) > token_budget):
+                break
             if not self.cache.alloc_slot(slot, self.capacity_tokens(req)):
                 break
             self.queue.popleft()
             req.state, req.slot = "active", slot
             self.slots[slot] = req
             admitted.append(req)
+            in_flight += self.chunk_tokens(req)
         return admitted
 
     def release(self, req: Request) -> None:
@@ -118,6 +143,8 @@ class Scheduler:
         self.cache.free_slot(req.slot)
         self.slots[req.slot] = None
         self.finished.append(req)
+        if self.on_release is not None:
+            self.on_release(req)
 
     # ------------------------------------------------------------- state
     @property
