@@ -34,10 +34,11 @@ import jax.numpy as jnp
 
 try:
     from benchmarks import analytic_model as am
-    from benchmarks.results import write_results
+    from benchmarks.results import write_results, write_telemetry_snapshot
 except ImportError:      # script-style run: benchmarks/ itself is sys.path[0]
     import analytic_model as am
-    from results import write_results
+    from results import write_results, write_telemetry_snapshot
+from repro import telemetry
 from repro.attention import NSAConfig, list_backends, nsa_attention
 from repro.core import apply_gates, init_nsa_params
 
@@ -249,8 +250,13 @@ def main(argv=None):
                          "(fwd+bwd through the backend's VJP), or both")
     ap.add_argument("--tiny", action="store_true",
                     help="CI bench-smoke shapes (smaller N)")
+    ap.add_argument("--telemetry-snapshot", default=None,
+                    help="enable global telemetry and write its snapshot "
+                         "(per-backend dispatch counters) here")
     args = ap.parse_args(argv)
 
+    if args.telemetry_snapshot:
+        telemetry.enable()
     shape = dict(n=64, b_k=8, t_sel=2, slots=2, max_pages=4) if args.tiny \
         else {}
     rows, bwd_rows = registry_rows(args.backend, bench_pass=args.bench_pass,
@@ -279,6 +285,10 @@ def main(argv=None):
             payload["bwd_ms"] = {r["key"]: r["ms"] for r in bwd_rows}
             payload["bwd_rows"] = bwd_rows
         write_results(args.json_out, "kernel_bench", payload)
+    if args.telemetry_snapshot:
+        write_telemetry_snapshot(args.telemetry_snapshot,
+                                 {"global": telemetry.registry().snapshot()},
+                                 source="kernel_bench")
     return rows, bwd_rows
 
 

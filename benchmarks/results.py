@@ -43,3 +43,13 @@ def write_results(path: str, name: str, payload: dict) -> dict:
         f.write("\n")
     print(f"[{name}] wrote {path}", file=sys.stderr)
     return doc
+
+
+def write_telemetry_snapshot(path: str, snapshot: dict, *,
+                             source: str = "") -> dict:
+    """Write a ``telemetry.Registry.snapshot()`` (or a dict of several, e.g.
+    ``{"global": ..., "engine": ...}``) in the same envelope, under bench
+    name ``telemetry_snapshot``.  Not a perf point — ``check_regression``
+    does not gate on it; the trajectory tool reads the dispatch counters."""
+    return write_results(path, "telemetry_snapshot",
+                         {"source": source, "snapshot": snapshot})

@@ -22,12 +22,17 @@ import time
 import numpy as np
 
 try:
-    from benchmarks.results import write_results
+    from benchmarks.results import write_results, write_telemetry_snapshot
 except ImportError:      # script-style run: benchmarks/ itself is sys.path[0]
-    from results import write_results
+    from results import write_results, write_telemetry_snapshot
+from repro import telemetry
 from repro.attention import AttentionRequest, resolve
 from repro.configs import get_config, reduced
 from repro.serving import Engine
+
+# the CI bench-smoke workload (also --tiny): small enough for interpret-mode
+# CPU, still exercising admission over time, chunked prefill and recycling
+TINY = dict(slots=2, n_requests=3, min_prompt=8, max_prompt=24, new_tokens=4)
 
 
 def _pctl(values, q):
@@ -36,11 +41,18 @@ def _pctl(values, q):
 
 def run_workload(cfg, *, slots, n_requests, min_prompt, max_prompt, new_tokens,
                  release_every, prefill_chunk=None, seed=0, quiet=False,
-                 backend=None, fused=True, prefill_token_budget=None):
-    """Release requests gradually; drive the engine until drained."""
+                 backend=None, fused=True, prefill_token_budget=None,
+                 engine_out: dict | None = None):
+    """Release requests gradually; drive the engine until drained.
+
+    Pass ``engine_out={}`` to receive the drained ``Engine`` under the
+    ``"engine"`` key (its telemetry snapshot / timelines outlive the run).
+    """
     eng = Engine(cfg, n_slots=slots, max_len=max_prompt + new_tokens + 8,
                  prefill_chunk=prefill_chunk, backend=backend, fused=fused,
                  prefill_token_budget=prefill_token_budget)
+    if engine_out is not None:
+        engine_out["engine"] = eng
     rng = np.random.default_rng(seed)
     pending = [rng.integers(0, cfg.vocab, size=(int(rng.integers(
         min_prompt, max_prompt + 1)),)) for _ in range(n_requests)]
@@ -63,7 +75,8 @@ def run_workload(cfg, *, slots, n_requests, min_prompt, max_prompt, new_tokens,
             if r.first_token_t]
     out = {
         "requests": len(reqs),
-        "prompt_lens": [len(r.prompt) for r in reqs],
+        # prompt_len (not len(r.prompt)): survives bounded-retention eviction
+        "prompt_lens": [r.prompt_len for r in reqs],
         "decode_backend": resolve(
             eng.cfg.nsa, AttentionRequest(mode="paged_decode", paged=True)).name,
         "fused": fused,
@@ -129,11 +142,37 @@ def main():
                          "(admission throttles to bound decode latency)")
     ap.add_argument("--json-out", default=None,
                     help="write a BENCH_serve.json trajectory point here")
+    ap.add_argument("--tiny", action="store_true",
+                    help="CI bench-smoke workload (slots/requests/prompt "
+                         "sizes from serve_bench.TINY; explicit size flags "
+                         "still override)")
+    ap.add_argument("--telemetry", action="store_true",
+                    help="enable global telemetry (dispatch counters, span "
+                         "events) for this run")
+    ap.add_argument("--telemetry-jsonl", default=None,
+                    help="stream telemetry events (spans, engine ticks, "
+                         "request timelines) to this JSONL file; implies "
+                         "--telemetry")
+    ap.add_argument("--telemetry-snapshot", default=None,
+                    help="write the final global+engine telemetry snapshot "
+                         "here (results.py envelope); implies --telemetry")
     args = ap.parse_args()
+
+    if args.tiny:
+        defaults = dict(slots=TINY["slots"], requests=TINY["n_requests"],
+                        min_prompt=TINY["min_prompt"],
+                        max_prompt=TINY["max_prompt"],
+                        new_tokens=TINY["new_tokens"])
+        for k, v in defaults.items():
+            if getattr(args, k) == ap.get_default(k):
+                setattr(args, k, v)
+    if args.telemetry or args.telemetry_jsonl or args.telemetry_snapshot:
+        telemetry.enable(jsonl=args.telemetry_jsonl)
 
     cfg = get_config(args.arch)
     if not args.full_size:
         cfg = reduced(cfg)
+    engines: dict = {}
     out = run_workload(cfg, slots=args.slots, n_requests=args.requests,
                        min_prompt=args.min_prompt, max_prompt=args.max_prompt,
                        new_tokens=args.new_tokens,
@@ -141,10 +180,17 @@ def main():
                        backend="paged_gather" if args.no_kernel
                        else args.backend,
                        fused=not args.sequential,
-                       prefill_token_budget=args.prefill_token_budget)
+                       prefill_token_budget=args.prefill_token_budget,
+                       engine_out=engines)
     if args.json_out:
         write_results(args.json_out, "serve_bench",
                       dict(out, arch=args.arch, full_size=args.full_size))
+    if args.telemetry_snapshot:
+        write_telemetry_snapshot(
+            args.telemetry_snapshot,
+            {"global": telemetry.registry().snapshot(),
+             "engine": engines["engine"].telemetry.snapshot()},
+            source="serve_bench")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,78 @@
+"""Telemetry overhead smoke check.
+
+Runs the tiny serve_bench workload twice — global telemetry off (the
+default: the engine still keeps its private always-on registry, that cost is
+part of the product) and fully on (global registry + JSONL event sink) — and
+fails when the telemetry-on decode throughput drops by more than
+``--threshold`` (default 5%).  This is the guard for the subsystem's design
+contract: near-zero cost when disabled, bounded cost when enabled.
+
+Each arm takes the best of ``--reps`` runs, for the same reason
+``kernel_bench.time_call`` takes min-of-reps: scheduler spikes on shared CI
+runners hit single runs, not the per-run minimum.
+
+  PYTHONPATH=src python benchmarks/telemetry_overhead.py --threshold 0.05
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+import tempfile
+
+try:
+    from benchmarks.serve_bench import TINY, run_workload
+except ImportError:      # script-style run: benchmarks/ itself is sys.path[0]
+    from serve_bench import TINY, run_workload
+from repro import telemetry
+from repro.configs import get_config, reduced
+
+
+def _arm(cfg, *, reps: int, seed: int) -> float:
+    best = 0.0
+    for r in range(reps):
+        out = run_workload(cfg, release_every=2, seed=seed + r, quiet=True,
+                           **TINY)
+        best = max(best, out["decode_tok_s"])
+    return best
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="codeqwen1.5-7b")
+    ap.add_argument("--threshold", type=float, default=0.05,
+                    help="max tolerated relative decode-throughput drop with "
+                         "telemetry on (0.05 = 5%%)")
+    ap.add_argument("--reps", type=int, default=2,
+                    help="runs per arm (best-of)")
+    args = ap.parse_args(argv)
+
+    cfg = reduced(get_config(args.arch))
+    # warm arm: first run pays jit compilation for both arms' measurements
+    run_workload(cfg, release_every=2, seed=123, quiet=True, **TINY)
+
+    telemetry.disable()
+    off = _arm(cfg, reps=args.reps, seed=0)
+
+    jsonl = tempfile.NamedTemporaryFile(suffix=".jsonl", delete=False)
+    jsonl.close()
+    telemetry.enable(jsonl=jsonl.name)
+    try:
+        on = _arm(cfg, reps=args.reps, seed=0)
+    finally:
+        telemetry.disable()
+        os.unlink(jsonl.name)
+
+    drop = 1 - on / off if off > 0 else 0.0
+    print(f"[telemetry_overhead] decode tok/s: off={off:.1f} on={on:.1f} "
+          f"(drop {drop:+.1%}, threshold {args.threshold:.0%})")
+    if drop > args.threshold:
+        print("[telemetry_overhead] FAIL: enabling telemetry costs more "
+              "than the threshold")
+        return 1
+    print("[telemetry_overhead] OK")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

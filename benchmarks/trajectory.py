@@ -70,15 +70,24 @@ def collate(points) -> dict:
         docs.sort(key=lambda d: d[0].get("unix_time", 0))
         metas, metrics_per_point = [], []
         for doc, src in docs:
-            lat, thr = extract(doc)
+            try:
+                lat, thr = extract(doc)
+            except SystemExit:
+                # non-perf envelopes (e.g. telemetry snapshots swept up by a
+                # BENCH_*.json glob) carry no gateable metrics — skip, don't die
+                print(f"[trajectory] skip {src}: bench "
+                      f"{doc.get('bench')!r} has no trajectory metrics",
+                      file=sys.stderr)
+                continue
             metrics_per_point.append({**lat, **thr})
             metas.append({
                 "source": src,
                 "unix_time": doc.get("unix_time"),
                 "environment": doc.get("environment", {}),
             })
-        names = sorted(set().union(*metrics_per_point)) \
-            if metrics_per_point else []
+        if not metrics_per_point:      # every doc of this bench was skipped
+            continue
+        names = sorted(set().union(*metrics_per_point))
         series = {m: [pt.get(m) for pt in metrics_per_point] for m in names}
         out[bench] = {"points": metas, "series": series}
     return out
@@ -105,6 +114,72 @@ def _mermaid_chart(bench: str, metric: str, values: list) -> list:
         "```",
         "",
     ]
+
+
+def telemetry_tick_charts(jsonl_path, *, max_points: int = 60) -> list:
+    """Markdown (mermaid xychart) queue-depth / active-slot series from the
+    ``tick`` events of a telemetry JSONL stream (``serve_bench
+    --telemetry-jsonl``).  Long runs are downsampled to ``max_points``."""
+    ticks = []
+    try:
+        with open(jsonl_path) as f:
+            for line in f:
+                try:
+                    rec = json.loads(line)
+                except json.JSONDecodeError:
+                    continue
+                if rec.get("kind") == "tick":
+                    ticks.append(rec)
+    except OSError as e:
+        print(f"[trajectory] skip telemetry jsonl {jsonl_path}: {e}",
+              file=sys.stderr)
+        return []
+    if len(ticks) < 2:
+        return []
+    step = max(1, len(ticks) // max_points)
+    ticks = ticks[::step]
+    lines = [f"## serving timeline ({jsonl_path}, {len(ticks)} ticks"
+             + (f", 1/{step} sampled" if step > 1 else "") + ")", ""]
+    for metric in ("queue_depth", "active_slots", "page_util_raw"):
+        vals = [float(t.get(metric, 0) or 0) for t in ticks]
+        if not any(vals):
+            continue
+        lines += [
+            "```mermaid",
+            "xychart-beta",
+            f'    title "{metric} per tick"',
+            f'    x-axis "tick" [{", ".join(str(t.get("tick", i + 1)) for i, t in enumerate(ticks))}]',
+            f'    y-axis "{metric}"',
+            f'    line [{", ".join(f"{v:.2f}" for v in vals)}]',
+            "```",
+            "",
+        ]
+    return lines
+
+
+def telemetry_dispatch_md(snapshot_doc: dict) -> list:
+    """Markdown dispatch-mix table from a telemetry-snapshot envelope (the
+    ``attention_dispatch_total`` counters of the global registry)."""
+    snaps = snapshot_doc.get("results", {}).get("snapshot", {})
+    if "counters" in snaps:            # bare snapshot, not {"global": ...}
+        snaps = {"": snaps}
+    rows = []
+    for reg_name, snap in sorted(snaps.items()):
+        counters = (snap or {}).get("counters", {})
+        for name in ("attention_dispatch_total",
+                     "attention_resolve_fallback_total"):
+            for labelkey, value in sorted(counters.get(name, {}).items()):
+                rows.append((reg_name, name, labelkey, value))
+    if not rows:
+        return []
+    lines = ["## attention dispatch mix", "",
+             "| registry | counter | labels | count |",
+             "|---|---|---|---:|"]
+    for reg_name, name, labelkey, value in rows:
+        lines.append(f"| {reg_name or 'global'} | {name} "
+                     f"| `{labelkey or '-'}` | {int(value)} |")
+    lines.append("")
+    return lines
 
 
 def markdown(traj: dict, *, plot: bool = False, plot_limit: int = 6) -> str:
@@ -147,6 +222,13 @@ def main(argv=None) -> int:
                     help="append mermaid xychart blocks (rendered natively "
                          "by GitHub step summaries) for the most-drifted "
                          "metrics of each bench")
+    ap.add_argument("--telemetry-jsonl", default=None,
+                    help="telemetry event stream (serve_bench "
+                         "--telemetry-jsonl): append per-tick queue-depth / "
+                         "slot-occupancy charts to the markdown")
+    ap.add_argument("--telemetry-snapshot", default=None,
+                    help="telemetry-snapshot envelope: append the "
+                         "backend-dispatch-mix table to the markdown")
     args = ap.parse_args(argv)
 
     points = load_points(args.inputs)
@@ -160,6 +242,20 @@ def main(argv=None) -> int:
           f"({sum(len(d['points']) for d in traj.values())} points, "
           f"{len(traj)} benches)", file=sys.stderr)
     md = markdown(traj, plot=args.plot)
+    extra = []
+    if args.telemetry_jsonl:
+        extra += telemetry_tick_charts(args.telemetry_jsonl)
+    if args.telemetry_snapshot:
+        try:
+            snap_doc = json.loads(
+                pathlib.Path(args.telemetry_snapshot).read_text())
+        except (OSError, json.JSONDecodeError) as e:
+            print(f"[trajectory] skip telemetry snapshot: {e}",
+                  file=sys.stderr)
+        else:
+            extra += telemetry_dispatch_md(snap_doc)
+    if extra:
+        md += "\n".join(extra) + "\n"
     if args.md_out:
         pathlib.Path(args.md_out).write_text(md)
         print(f"[trajectory] wrote {args.md_out}", file=sys.stderr)

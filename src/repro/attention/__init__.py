@@ -19,10 +19,14 @@ from repro.attention.registry import (
     BackendResolutionError,
     Capabilities,
     capable_backends,
+    explain,
     get_backend,
     list_backends,
+    near_misses,
     register_backend,
     resolve,
+    unsupported_reason,
+    unsupported_reasons,
 )
 from repro.attention import backends as _backends  # registers the backends
 from repro.attention.api import normalize_backend_name, nsa_attention
@@ -48,10 +52,12 @@ __all__ = [
     "SELECTED_KERNELS",
     "capable_backends",
     "default_selected_kernel",
+    "explain",
     "flash_attention",
     "get_backend",
     "kernel_vjp",
     "list_backends",
+    "near_misses",
     "normalize_backend_name",
     "nsa_attention",
     "paged_decode_attention",
@@ -60,4 +66,6 @@ __all__ = [
     "selected_attention",
     "sparse_selected_fn",
     "twin_vjp",
+    "unsupported_reason",
+    "unsupported_reasons",
 ]

@@ -17,6 +17,8 @@ from __future__ import annotations
 import dataclasses
 from typing import Callable, Optional, Protocol, runtime_checkable
 
+from repro.telemetry import metrics as _metrics
+
 MODES = ("train", "prefill", "decode", "paged_decode")
 ALGORITHMS = ("nsa", "full", "sliding")
 
@@ -95,18 +97,28 @@ class AttentionBackend(Protocol):
 
 class BackendResolutionError(ValueError):
     """No (capable) backend for a request.  Carries the requested name, the
-    request, the rejection reason, and the names of capable alternatives."""
+    request, the rejection reason, the names of capable alternatives, and —
+    when nothing is capable — the nearest misses: the backends failing the
+    fewest capability criteria, with their first failing reason each, so
+    the error names what to change instead of just what went wrong."""
 
     def __init__(self, requested: str, request: AttentionRequest,
-                 reason: str, alternatives: tuple):
+                 reason: str, alternatives: tuple, near_misses: tuple = ()):
         self.requested = requested
         self.request = request
         self.reason = reason
         self.alternatives = tuple(alternatives)
-        alt = (f" Capable backends for this request: "
-               f"{', '.join(self.alternatives)}."
-               if self.alternatives else
-               " No registered backend covers this request.")
+        self.near_misses = tuple(near_misses)
+        if self.alternatives:
+            alt = (f" Capable backends for this request: "
+                   f"{', '.join(self.alternatives)}.")
+        else:
+            alt = " No registered backend covers this request."
+            if self.near_misses:
+                misses = "; ".join(f"{n}: {r}" for n, r in self.near_misses)
+                alt += (f" Nearest misses — {misses}."
+                        f" (repro.attention.explain(cfg, request) prints the"
+                        f" full capability table.)")
         super().__init__(
             f"attention backend '{requested}' cannot serve "
             f"mode={request.mode}/algorithm={request.algorithm} "
@@ -146,31 +158,88 @@ def list_backends() -> dict:
     return {n: _REGISTRY[n].capabilities for n in sorted(_REGISTRY)}
 
 
+def unsupported_reasons(caps: Capabilities,
+                        req: AttentionRequest) -> tuple:
+    """Every criterion of ``req`` that ``caps`` fails (empty = capable)."""
+    reasons = []
+    if req.mode not in caps.modes:
+        reasons.append(f"mode '{req.mode}' not in declared modes {caps.modes}")
+    if req.algorithm not in caps.algorithms:
+        reasons.append(f"algorithm '{req.algorithm}' not in declared "
+                       f"algorithms {caps.algorithms}")
+    if req.needs_grad and not caps.differentiable:
+        reasons.append(
+            "not differentiable (no VJP), but gradients were requested")
+    if req.g < caps.min_g:
+        reasons.append(
+            f"GQA group size g={req.g} below declared min_g={caps.min_g}")
+    if caps.max_g is not None and req.g > caps.max_g:
+        reasons.append(
+            f"GQA group size g={req.g} above declared max_g={caps.max_g}")
+    if req.paged and not caps.paged:
+        reasons.append("does not read paged KV storage")
+    if req.interpret and not caps.interpret_ok:
+        reasons.append("requires compiled Pallas (no interpret-mode support)")
+    return tuple(reasons)
+
+
 def unsupported_reason(caps: Capabilities,
                        req: AttentionRequest) -> Optional[str]:
-    """Why ``caps`` cannot serve ``req`` (None = it can)."""
-    if req.mode not in caps.modes:
-        return f"mode '{req.mode}' not in declared modes {caps.modes}"
-    if req.algorithm not in caps.algorithms:
-        return (f"algorithm '{req.algorithm}' not in declared algorithms "
-                f"{caps.algorithms}")
-    if req.needs_grad and not caps.differentiable:
-        return "not differentiable (no VJP), but gradients were requested"
-    if req.g < caps.min_g:
-        return f"GQA group size g={req.g} below declared min_g={caps.min_g}"
-    if caps.max_g is not None and req.g > caps.max_g:
-        return f"GQA group size g={req.g} above declared max_g={caps.max_g}"
-    if req.paged and not caps.paged:
-        return "does not read paged KV storage"
-    if req.interpret and not caps.interpret_ok:
-        return "requires compiled Pallas (no interpret-mode support)"
-    return None
+    """Why ``caps`` cannot serve ``req`` (None = it can; first reason)."""
+    reasons = unsupported_reasons(caps, req)
+    return reasons[0] if reasons else None
 
 
 def capable_backends(req: AttentionRequest) -> tuple:
     """Names of all registered backends that can serve ``req``."""
     return tuple(n for n in sorted(_REGISTRY)
                  if unsupported_reason(_REGISTRY[n].capabilities, req) is None)
+
+
+def near_misses(req: AttentionRequest, limit: int = 3) -> tuple:
+    """((name, first reason), ...) for the backends failing the *fewest*
+    capability criteria — the candidates a caller is closest to unlocking."""
+    scored = []
+    for n in sorted(_REGISTRY):
+        reasons = unsupported_reasons(_REGISTRY[n].capabilities, req)
+        if reasons:
+            scored.append((len(reasons), n, reasons[0]))
+    scored.sort()
+    return tuple((n, r) for _, n, r in scored[:limit])
+
+
+def explain(cfg, request: AttentionRequest, backend: str = "auto") -> str:
+    """Human-readable capability table for ``request``: one row per
+    registered backend with its auto-resolve score (capable) or its
+    ``unsupported_reason`` (not capable), plus the backend ``resolve``
+    would pick.  The debugging companion to
+    :class:`BackendResolutionError`::
+
+        print(repro.attention.explain(cfg, AttentionRequest(mode="train")))
+    """
+    rows = []
+    for name in sorted(_REGISTRY):
+        caps = _REGISTRY[name].capabilities
+        reasons = unsupported_reasons(caps, request)
+        if reasons:
+            status = f"--    {'; '.join(reasons)}"
+        else:
+            status = f"OK    score={_score(caps, request)}"
+        rows.append((name, caps.describe(), status))
+    try:
+        pick = f"resolve -> {resolve(cfg, request, backend).name}"
+    except BackendResolutionError as e:
+        pick = f"resolve -> FAILS: {e.reason}"
+    w_name = max(len(r[0]) for r in rows)
+    w_caps = max(len(r[1]) for r in rows)
+    lines = [f"AttentionRequest(mode={request.mode}, "
+             f"algorithm={request.algorithm}, g={request.g}, "
+             f"seq_len={request.seq_len}, needs_grad={request.needs_grad}, "
+             f"paged={request.paged}, interpret={request.interpret}, "
+             f"platform={request.platform})",
+             pick, ""]
+    lines += [f"{n:<{w_name}}  [{c:<{w_caps}}]  {s}" for n, c, s in rows]
+    return "\n".join(lines)
 
 
 def _score(caps: Capabilities, req: AttentionRequest) -> int:
@@ -201,6 +270,7 @@ def resolve(cfg, request: AttentionRequest,
     # decode request is malformed, not merely unserved — fail it up front
     # rather than letting a backend crash on mismatched shapes
     if request.mode in ("decode", "paged_decode") and request.algorithm != "nsa":
+        _record_fallback("error", request, requested=backend)
         raise BackendResolutionError(
             backend, request,
             f"mode '{request.mode}' is NSA-only (algorithm "
@@ -221,19 +291,37 @@ def resolve(cfg, request: AttentionRequest,
     if (cfg is not None and request.algorithm == "nsa"
             and request.mode in ("train", "prefill") and request.seq_len
             and request.seq_len < cfg.min_seq_for_sparse):
+        if backend != "reference":
+            _record_fallback("dense_short_seq", request, requested=backend)
         backend = "reference"
 
     if backend != "auto":
         b = get_backend(backend)
         reason = unsupported_reason(b.capabilities, request)
         if reason is not None:
+            _record_fallback("error", request, requested=backend)
             raise BackendResolutionError(backend, request, reason,
-                                         capable_backends(request))
+                                         capable_backends(request),
+                                         near_misses(request))
         return b
 
     names = capable_backends(request)
     if not names:
+        _record_fallback("error", request, requested="auto")
         raise BackendResolutionError("auto", request,
-                                     "no capable backend registered", ())
+                                     "no capable backend registered", (),
+                                     near_misses(request))
     return _REGISTRY[max(
         names, key=lambda n: (_score(_REGISTRY[n].capabilities, request), n))]
+
+
+def _record_fallback(kind: str, request: AttentionRequest, *,
+                     requested: str) -> None:
+    """Count + stream a resolution-fallback event (no-op when global
+    telemetry is off)."""
+    reg = _metrics.registry()
+    reg.counter("attention_resolve_fallback_total", kind=kind,
+                mode=request.mode).inc()
+    reg.event("resolve_fallback", fallback=kind, requested=requested,
+              mode=request.mode, algorithm=request.algorithm,
+              seq_len=request.seq_len, g=request.g)

@@ -150,25 +150,26 @@ def flash_attention(q, k, v, *, g: int, causal: bool = True,
             pl.BlockSpec((1, rows, 128), lambda hk, iq, ik: (hk, iq, 0)))
         out_shape.append(
             jax.ShapeDtypeStruct((h_k, rows_total, 128), jnp.float32))
-    return pl.pallas_call(
-        kernel,
-        grid=(h_k, nq, nk),
-        in_specs=[
-            pl.BlockSpec((1, rows, d), lambda hk, iq, ik: (hk, iq, 0)),
-            pl.BlockSpec((1, block_k, d), kv_index),
-            pl.BlockSpec((1, block_k, dv), kv_index),
-        ],
-        out_specs=out_specs if return_lse else out_specs[0],
-        out_shape=out_shape if return_lse else out_shape[0],
-        scratch_shapes=[
-            pltpu.VMEM((rows, 128), jnp.float32),
-            pltpu.VMEM((rows, 128), jnp.float32),
-            pltpu.VMEM((rows, dv), jnp.float32),
-        ],
-        compiler_params=tpu_compiler_params(
-            dimension_semantics=("parallel", "parallel", "arbitrary")),
-        interpret=interpret,
-    )(q, k, v)
+    with jax.named_scope("flash_attention"):
+        return pl.pallas_call(
+            kernel,
+            grid=(h_k, nq, nk),
+            in_specs=[
+                pl.BlockSpec((1, rows, d), lambda hk, iq, ik: (hk, iq, 0)),
+                pl.BlockSpec((1, block_k, d), kv_index),
+                pl.BlockSpec((1, block_k, dv), kv_index),
+            ],
+            out_specs=out_specs if return_lse else out_specs[0],
+            out_shape=out_shape if return_lse else out_shape[0],
+            scratch_shapes=[
+                pltpu.VMEM((rows, 128), jnp.float32),
+                pltpu.VMEM((rows, 128), jnp.float32),
+                pltpu.VMEM((rows, dv), jnp.float32),
+            ],
+            compiler_params=tpu_compiler_params(
+                dimension_semantics=("parallel", "parallel", "arbitrary")),
+            interpret=interpret,
+        )(q, k, v)
 
 
 # =====================================================================
@@ -256,24 +257,25 @@ def flash_attention_dq(q, k, v, do, lse, delta, *, g: int, causal: bool = True,
     kernel = functools.partial(
         _dq_kernel, scale=scale, g=g, block_q=block_q, block_k=block_k,
         offset=offset, valid_k=valid_k, causal=causal, window=window)
-    return pl.pallas_call(
-        kernel,
-        grid=(h_k, nq, nk),
-        in_specs=[
-            pl.BlockSpec((1, rows, d), q_index),
-            pl.BlockSpec((1, block_k, d), kv_index),
-            pl.BlockSpec((1, block_k, dv), kv_index),
-            pl.BlockSpec((1, rows, dv), q_index),
-            pl.BlockSpec((1, rows, 128), q_index),
-            pl.BlockSpec((1, rows, 128), q_index),
-        ],
-        out_specs=pl.BlockSpec((1, rows, d), q_index),
-        out_shape=jax.ShapeDtypeStruct((h_k, rows_total, d), jnp.float32),
-        scratch_shapes=[pltpu.VMEM((rows, d), jnp.float32)],
-        compiler_params=tpu_compiler_params(
-            dimension_semantics=("parallel", "parallel", "arbitrary")),
-        interpret=interpret,
-    )(q, k, v, do, lse, delta)
+    with jax.named_scope("flash_attention_dq"):
+        return pl.pallas_call(
+            kernel,
+            grid=(h_k, nq, nk),
+            in_specs=[
+                pl.BlockSpec((1, rows, d), q_index),
+                pl.BlockSpec((1, block_k, d), kv_index),
+                pl.BlockSpec((1, block_k, dv), kv_index),
+                pl.BlockSpec((1, rows, dv), q_index),
+                pl.BlockSpec((1, rows, 128), q_index),
+                pl.BlockSpec((1, rows, 128), q_index),
+            ],
+            out_specs=pl.BlockSpec((1, rows, d), q_index),
+            out_shape=jax.ShapeDtypeStruct((h_k, rows_total, d), jnp.float32),
+            scratch_shapes=[pltpu.VMEM((rows, d), jnp.float32)],
+            compiler_params=tpu_compiler_params(
+                dimension_semantics=("parallel", "parallel", "arbitrary")),
+            interpret=interpret,
+        )(q, k, v, do, lse, delta)
 
 
 def _dkv_kernel(q_ref, k_ref, v_ref, do_ref, lse_ref, delta_ref, dk_ref,
@@ -361,30 +363,32 @@ def flash_attention_dkv(q, k, v, do, lse, delta, *, g: int,
     kernel = functools.partial(
         _dkv_kernel, scale=scale, g=g, block_q=block_q, block_k=block_k,
         offset=offset, valid_k=valid_k, causal=causal, window=window)
-    return pl.pallas_call(
-        kernel,
-        grid=(h_k, nk, nq),
-        in_specs=[
-            pl.BlockSpec((1, rows, d), q_index),
-            pl.BlockSpec((1, block_k, d), kv_index),
-            pl.BlockSpec((1, block_k, dv_dim), kv_index),
-            pl.BlockSpec((1, rows, dv_dim), q_index),
-            pl.BlockSpec((1, rows, 128), q_index),
-            pl.BlockSpec((1, rows, 128), q_index),
-        ],
-        out_specs=[
-            pl.BlockSpec((1, block_k, d), kv_index),
-            pl.BlockSpec((1, block_k, dv_dim), kv_index),
-        ],
-        out_shape=[
-            jax.ShapeDtypeStruct((h_k, nk * block_k, d), jnp.float32),
-            jax.ShapeDtypeStruct((h_k, nk * block_k, dv_dim), jnp.float32),
-        ],
-        scratch_shapes=[
-            pltpu.VMEM((block_k, d), jnp.float32),
-            pltpu.VMEM((block_k, dv_dim), jnp.float32),
-        ],
-        compiler_params=tpu_compiler_params(
-            dimension_semantics=("parallel", "parallel", "arbitrary")),
-        interpret=interpret,
-    )(q, k, v, do, lse, delta)
+    with jax.named_scope("flash_attention_dkv"):
+        return pl.pallas_call(
+            kernel,
+            grid=(h_k, nk, nq),
+            in_specs=[
+                pl.BlockSpec((1, rows, d), q_index),
+                pl.BlockSpec((1, block_k, d), kv_index),
+                pl.BlockSpec((1, block_k, dv_dim), kv_index),
+                pl.BlockSpec((1, rows, dv_dim), q_index),
+                pl.BlockSpec((1, rows, 128), q_index),
+                pl.BlockSpec((1, rows, 128), q_index),
+            ],
+            out_specs=[
+                pl.BlockSpec((1, block_k, d), kv_index),
+                pl.BlockSpec((1, block_k, dv_dim), kv_index),
+            ],
+            out_shape=[
+                jax.ShapeDtypeStruct((h_k, nk * block_k, d), jnp.float32),
+                jax.ShapeDtypeStruct((h_k, nk * block_k, dv_dim),
+                                     jnp.float32),
+            ],
+            scratch_shapes=[
+                pltpu.VMEM((block_k, d), jnp.float32),
+                pltpu.VMEM((block_k, dv_dim), jnp.float32),
+            ],
+            compiler_params=tpu_compiler_params(
+                dimension_semantics=("parallel", "parallel", "arbitrary")),
+            interpret=interpret,
+        )(q, k, v, do, lse, delta)

@@ -134,26 +134,31 @@ def fsa_faithful(q_rows, k, v, sel_rows, kv_ids, kv_cnt, q_ids, slot_ids, q_cnt,
     # ---- kernel 1: statistics --------------------------------------------
     stats = functools.partial(_stats_kernel, scale=scale, g=g, block_q=block_q,
                               block_k=block_k, seq_len=seq_len)
-    lse = pl.pallas_call(
-        stats,
-        grid_spec=pltpu.PrefetchScalarGridSpec(
-            num_scalar_prefetch=2,
-            grid=(h_k, nq, cap),
-            in_specs=[
-                pl.BlockSpec((1, rows, d), lambda hk, iq, j, i1, c1: (hk, iq, 0)),
-                pl.BlockSpec((1, block_k, d),
-                             lambda hk, iq, j, i1, c1: (hk, i1[hk, iq, j], 0)),
-                pl.BlockSpec((1, rows, t), lambda hk, iq, j, i1, c1: (hk, iq, 0)),
-            ],
-            out_specs=pl.BlockSpec((1, rows, 128),
-                                   lambda hk, iq, j, i1, c1: (hk, iq, 0)),
-            scratch_shapes=[pltpu.VMEM((rows, 128), jnp.float32)] * 2,
-        ),
-        out_shape=jax.ShapeDtypeStruct((h_k, rows_total, 128), jnp.float32),
-        compiler_params=tpu_compiler_params(
-            dimension_semantics=("parallel", "parallel", "arbitrary")),
-        interpret=interpret,
-    )(kv_ids, kv_cnt, q_rows, k, sel_rows)
+    with jax.named_scope("fsa_faithful_stats"):
+        lse = pl.pallas_call(
+            stats,
+            grid_spec=pltpu.PrefetchScalarGridSpec(
+                num_scalar_prefetch=2,
+                grid=(h_k, nq, cap),
+                in_specs=[
+                    pl.BlockSpec((1, rows, d),
+                                 lambda hk, iq, j, i1, c1: (hk, iq, 0)),
+                    pl.BlockSpec((1, block_k, d),
+                                 lambda hk, iq, j, i1, c1:
+                                     (hk, i1[hk, iq, j], 0)),
+                    pl.BlockSpec((1, rows, t),
+                                 lambda hk, iq, j, i1, c1: (hk, iq, 0)),
+                ],
+                out_specs=pl.BlockSpec((1, rows, 128),
+                                       lambda hk, iq, j, i1, c1: (hk, iq, 0)),
+                scratch_shapes=[pltpu.VMEM((rows, 128), jnp.float32)] * 2,
+            ),
+            out_shape=jax.ShapeDtypeStruct((h_k, rows_total, 128),
+                                           jnp.float32),
+            compiler_params=tpu_compiler_params(
+                dimension_semantics=("parallel", "parallel", "arbitrary")),
+            interpret=interpret,
+        )(kv_ids, kv_cnt, q_rows, k, sel_rows)
 
     # ---- kernel 2: KV-block-major partials into O_buf ---------------------
     partial = functools.partial(_partial_kernel, scale=scale, g=g,
@@ -164,47 +169,55 @@ def fsa_faithful(q_rows, k, v, sel_rows, kv_ids, kv_cnt, q_ids, slot_ids, q_cnt,
         slot = jnp.where(j < qc[hk, ib], si[hk, ib, j], cap)
         return (hk, qi[hk, ib, j], slot, 0, 0)
 
-    obuf = pl.pallas_call(
-        partial,
-        grid_spec=pltpu.PrefetchScalarGridSpec(
-            num_scalar_prefetch=3,
-            grid=(h_k, nb, capq),
-            in_specs=[
-                pl.BlockSpec((1, rows, d),
-                             lambda hk, ib, j, qi, si, qc: (hk, qi[hk, ib, j], 0)),
-                pl.BlockSpec((1, block_k, d),
-                             lambda hk, ib, j, qi, si, qc: (hk, ib, 0)),
-                pl.BlockSpec((1, block_k, dv),
-                             lambda hk, ib, j, qi, si, qc: (hk, ib, 0)),
-                pl.BlockSpec((1, rows, t),
-                             lambda hk, ib, j, qi, si, qc: (hk, qi[hk, ib, j], 0)),
-                pl.BlockSpec((1, rows, 128),
-                             lambda hk, ib, j, qi, si, qc: (hk, qi[hk, ib, j], 0)),
-            ],
-            out_specs=pl.BlockSpec((1, 1, 1, rows, dv), _obuf_index),
-        ),
-        out_shape=jax.ShapeDtypeStruct((h_k, nq, cap + 1, rows, dv), jnp.float32),
-        compiler_params=tpu_compiler_params(
-            dimension_semantics=("parallel", "arbitrary", "arbitrary")),
-        interpret=interpret,
-    )(q_ids, slot_ids, q_cnt, q_rows, k, v, sel_rows, lse)
+    with jax.named_scope("fsa_faithful_partial"):
+        obuf = pl.pallas_call(
+            partial,
+            grid_spec=pltpu.PrefetchScalarGridSpec(
+                num_scalar_prefetch=3,
+                grid=(h_k, nb, capq),
+                in_specs=[
+                    pl.BlockSpec((1, rows, d),
+                                 lambda hk, ib, j, qi, si, qc:
+                                     (hk, qi[hk, ib, j], 0)),
+                    pl.BlockSpec((1, block_k, d),
+                                 lambda hk, ib, j, qi, si, qc: (hk, ib, 0)),
+                    pl.BlockSpec((1, block_k, dv),
+                                 lambda hk, ib, j, qi, si, qc: (hk, ib, 0)),
+                    pl.BlockSpec((1, rows, t),
+                                 lambda hk, ib, j, qi, si, qc:
+                                     (hk, qi[hk, ib, j], 0)),
+                    pl.BlockSpec((1, rows, 128),
+                                 lambda hk, ib, j, qi, si, qc:
+                                     (hk, qi[hk, ib, j], 0)),
+                ],
+                out_specs=pl.BlockSpec((1, 1, 1, rows, dv), _obuf_index),
+            ),
+            out_shape=jax.ShapeDtypeStruct((h_k, nq, cap + 1, rows, dv),
+                                           jnp.float32),
+            compiler_params=tpu_compiler_params(
+                dimension_semantics=("parallel", "arbitrary", "arbitrary")),
+            interpret=interpret,
+        )(q_ids, slot_ids, q_cnt, q_rows, k, v, sel_rows, lse)
 
     # ---- kernel 3: reduction ----------------------------------------------
-    out = pl.pallas_call(
-        _reduce_kernel,
-        grid_spec=pltpu.PrefetchScalarGridSpec(
-            num_scalar_prefetch=1,
-            grid=(h_k, nq, cap),
-            in_specs=[
-                pl.BlockSpec((1, 1, 1, rows, dv),
-                             lambda hk, iq, j, c1: (hk, iq, j, 0, 0)),
-            ],
-            out_specs=pl.BlockSpec((1, rows, dv), lambda hk, iq, j, c1: (hk, iq, 0)),
-            scratch_shapes=[pltpu.VMEM((rows, dv), jnp.float32)],
-        ),
-        out_shape=jax.ShapeDtypeStruct((h_k, rows_total, dv), q_rows.dtype),
-        compiler_params=tpu_compiler_params(
-            dimension_semantics=("parallel", "parallel", "arbitrary")),
-        interpret=interpret,
-    )(kv_cnt, obuf)
+    with jax.named_scope("fsa_faithful_reduce"):
+        out = pl.pallas_call(
+            _reduce_kernel,
+            grid_spec=pltpu.PrefetchScalarGridSpec(
+                num_scalar_prefetch=1,
+                grid=(h_k, nq, cap),
+                in_specs=[
+                    pl.BlockSpec((1, 1, 1, rows, dv),
+                                 lambda hk, iq, j, c1: (hk, iq, j, 0, 0)),
+                ],
+                out_specs=pl.BlockSpec((1, rows, dv),
+                                       lambda hk, iq, j, c1: (hk, iq, 0)),
+                scratch_shapes=[pltpu.VMEM((rows, dv), jnp.float32)],
+            ),
+            out_shape=jax.ShapeDtypeStruct((h_k, rows_total, dv),
+                                           q_rows.dtype),
+            compiler_params=tpu_compiler_params(
+                dimension_semantics=("parallel", "parallel", "arbitrary")),
+            interpret=interpret,
+        )(kv_cnt, obuf)
     return (out, lse) if return_lse else out

@@ -149,11 +149,12 @@ def fsa_selected(q_rows, k, v, sel_rows, kv_ids, kv_cnt, *, g: int,
             pltpu.VMEM((rows, dv), jnp.float32),
         ],
     )
-    return pl.pallas_call(
-        kernel,
-        grid_spec=grid_spec,
-        out_shape=out_shape if return_lse else out_shape[0],
-        compiler_params=tpu_compiler_params(
-            dimension_semantics=("parallel", "parallel", "arbitrary")),
-        interpret=interpret,
-    )(kv_ids, kv_cnt, q_rows, k, v, sel_rows)
+    with jax.named_scope("fsa_selected"):
+        return pl.pallas_call(
+            kernel,
+            grid_spec=grid_spec,
+            out_shape=out_shape if return_lse else out_shape[0],
+            compiler_params=tpu_compiler_params(
+                dimension_semantics=("parallel", "parallel", "arbitrary")),
+            interpret=interpret,
+        )(kv_ids, kv_cnt, q_rows, k, v, sel_rows)

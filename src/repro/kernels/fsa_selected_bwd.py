@@ -113,14 +113,15 @@ def fsa_selected_dq(q_rows, k, v, sel_rows, do_rows, lse, delta, kv_ids,
                                lambda hk, iq, j, ids, cnt: (hk, iq, 0)),
         scratch_shapes=[pltpu.VMEM((rows, d), jnp.float32)],
     )
-    return pl.pallas_call(
-        kernel,
-        grid_spec=grid_spec,
-        out_shape=jax.ShapeDtypeStruct((h_k, rows_total, d), jnp.float32),
-        compiler_params=tpu_compiler_params(
-            dimension_semantics=("parallel", "parallel", "arbitrary")),
-        interpret=interpret,
-    )(kv_ids, kv_cnt, q_rows, k, v, sel_rows, do_rows, lse, delta)
+    with jax.named_scope("fsa_selected_dq"):
+        return pl.pallas_call(
+            kernel,
+            grid_spec=grid_spec,
+            out_shape=jax.ShapeDtypeStruct((h_k, rows_total, d), jnp.float32),
+            compiler_params=tpu_compiler_params(
+                dimension_semantics=("parallel", "parallel", "arbitrary")),
+            interpret=interpret,
+        )(kv_ids, kv_cnt, q_rows, k, v, sel_rows, do_rows, lse, delta)
 
 
 # ------------------------------------------------------------- dK/dV kernel
@@ -212,14 +213,16 @@ def fsa_selected_dkv(q_rows, k, v, sel_rows, do_rows, lse, delta, q_ids,
             pltpu.VMEM((block_k, dv_dim), jnp.float32),
         ],
     )
-    return pl.pallas_call(
-        kernel,
-        grid_spec=grid_spec,
-        out_shape=[
-            jax.ShapeDtypeStruct((h_k, nb * block_k, d), jnp.float32),
-            jax.ShapeDtypeStruct((h_k, nb * block_k, dv_dim), jnp.float32),
-        ],
-        compiler_params=tpu_compiler_params(
-            dimension_semantics=("parallel", "parallel", "arbitrary")),
-        interpret=interpret,
-    )(q_ids, q_cnt, q_rows, k, v, sel_rows, do_rows, lse, delta)
+    with jax.named_scope("fsa_selected_dkv"):
+        return pl.pallas_call(
+            kernel,
+            grid_spec=grid_spec,
+            out_shape=[
+                jax.ShapeDtypeStruct((h_k, nb * block_k, d), jnp.float32),
+                jax.ShapeDtypeStruct((h_k, nb * block_k, dv_dim),
+                                     jnp.float32),
+            ],
+            compiler_params=tpu_compiler_params(
+                dimension_semantics=("parallel", "parallel", "arbitrary")),
+            interpret=interpret,
+        )(q_ids, q_cnt, q_rows, k, v, sel_rows, do_rows, lse, delta)

@@ -98,11 +98,12 @@ def nsa_selected(q_pad, k, v, idx, *, block_k: int,
             pltpu.VMEM((g_pad, dv), jnp.float32),
         ],
     )
-    return pl.pallas_call(
-        kernel,
-        grid_spec=grid_spec,
-        out_shape=jax.ShapeDtypeStruct((h_k, n, g_pad, dv), q_pad.dtype),
-        compiler_params=tpu_compiler_params(
-            dimension_semantics=("parallel", "arbitrary", "arbitrary")),
-        interpret=interpret,
-    )(idx, q_pad, k, v)
+    with jax.named_scope("nsa_selected"):
+        return pl.pallas_call(
+            kernel,
+            grid_spec=grid_spec,
+            out_shape=jax.ShapeDtypeStruct((h_k, n, g_pad, dv), q_pad.dtype),
+            compiler_params=tpu_compiler_params(
+                dimension_semantics=("parallel", "arbitrary", "arbitrary")),
+            interpret=interpret,
+        )(idx, q_pad, k, v)

@@ -201,13 +201,15 @@ def paged_decode(q_rows, k_pages, v_pages, pages, blks, pos, *, g: int,
             pltpu.VMEM((2, rows, dv), jnp.float32),
         ],
     )
-    o_sel, o_win = pl.pallas_call(
-        kernel,
-        grid_spec=grid_spec,
-        out_shape=[jax.ShapeDtypeStruct((h_k, rows_total, dv), jnp.float32),
-                   jax.ShapeDtypeStruct((h_k, rows_total, dv), jnp.float32)],
-        compiler_params=tpu_compiler_params(
-            dimension_semantics=("parallel", "parallel", "arbitrary")),
-        interpret=interpret,
-    )(pages, blks, pos, q_rows, k_pages, v_pages)
+    with jax.named_scope("paged_decode"):
+        o_sel, o_win = pl.pallas_call(
+            kernel,
+            grid_spec=grid_spec,
+            out_shape=[
+                jax.ShapeDtypeStruct((h_k, rows_total, dv), jnp.float32),
+                jax.ShapeDtypeStruct((h_k, rows_total, dv), jnp.float32)],
+            compiler_params=tpu_compiler_params(
+                dimension_semantics=("parallel", "parallel", "arbitrary")),
+            interpret=interpret,
+        )(pages, blks, pos, q_rows, k_pages, v_pages)
     return o_sel, o_win

@@ -25,6 +25,7 @@ Example::
 from __future__ import annotations
 
 import asyncio
+import collections
 
 from repro.serving.engine import Engine
 from repro.serving.scheduler import Request
@@ -33,15 +34,26 @@ _DONE = object()        # stream sentinel: request finished
 
 
 class AsyncEngine:
-    """Asyncio front-end: concurrent submissions, per-request streaming."""
+    """Asyncio front-end: concurrent submissions, per-request streaming.
 
-    def __init__(self, engine: Engine):
+    Finished-request timelines (submit/admit/first_chunk/first_token/finish
+    wall clocks) are retained in a bounded LRU dict — ``timeline(rid)`` — so
+    a long-running service can report per-request latency without keeping
+    the requests' token lists alive (the engine's scheduler separately
+    bounds those via ``retain_outputs``).
+    """
+
+    def __init__(self, engine: Engine, *, retain_timelines: int = 4096):
         self.engine = engine
         engine.on_token = self._on_token       # worker-thread callbacks
         engine.on_finish = self._on_finish
         self._queues: dict[int, asyncio.Queue] = {}
         self._loop: asyncio.AbstractEventLoop | None = None
         self._task: asyncio.Task | None = None
+        # rid -> timeline dict; bounded so indefinite serving stays O(cap)
+        self._timelines: "collections.OrderedDict[int, dict]" = \
+            collections.OrderedDict()
+        self.retain_timelines = retain_timelines
 
     # ------------------------------------------------- engine-thread hooks
     def _post(self, rid: int, item) -> None:
@@ -53,7 +65,20 @@ class AsyncEngine:
         self._post(req.rid, tok)
 
     def _on_finish(self, req: Request) -> None:
+        self._timelines[req.rid] = req.timeline()
+        while len(self._timelines) > self.retain_timelines:
+            self._timelines.popitem(last=False)
         self._post(req.rid, _DONE)
+
+    # ---------------------------------------------------------- telemetry
+    def timeline(self, rid: int) -> dict | None:
+        """Per-request lifecycle stamps for a finished request (None if the
+        rid is unknown or already evicted past ``retain_timelines``)."""
+        return self._timelines.get(rid)
+
+    def timelines(self) -> dict:
+        """{rid: timeline} for every retained finished request."""
+        return dict(self._timelines)
 
     # ------------------------------------------------------- service loop
     def _ensure_running(self) -> None:

@@ -36,6 +36,7 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
+from repro import telemetry
 from repro.models import build, transformer
 from repro.serving.cache import PagedNSACache
 from repro.serving.scheduler import Request, Scheduler
@@ -52,7 +53,9 @@ class Engine:
                  use_kernel: bool | None = None,
                  admit_limit: int | None = None,
                  prefill_token_budget: int | None = None,
-                 fused: bool = True):
+                 fused: bool = True,
+                 retain_outputs: int | None = 1024,
+                 metrics: "telemetry.Registry | None" = None):
         if cfg.family not in SUPPORTED_FAMILIES:
             raise NotImplementedError(
                 f"paged serving supports families {SUPPORTED_FAMILIES}, got "
@@ -80,7 +83,8 @@ class Engine:
         # chunk never exceeds the slot's addressable rows
         self.prefill_chunk = min(prefill_chunk or 4 * p,
                                  self.cache.max_pages * p)
-        self.scheduler = Scheduler(self.cache, self.prefill_chunk)
+        self.scheduler = Scheduler(self.cache, self.prefill_chunk,
+                                   retain_outputs=retain_outputs)
         self.scheduler.on_release = self._on_release
         self.n_slots = n_slots
         # caps one step's admission batch (everything admitted together is
@@ -118,10 +122,42 @@ class Engine:
                     dec_active, tables, cfg),
             donate_argnums=(1,))
         self._last_tokens = np.zeros((n_slots,), np.int32)
-        self.stats = {"decoded_tokens": 0, "decode_ticks": 0, "decode_s": 0.0,
-                      "prefill_tokens": 0, "prefill_s": 0.0,
-                      "mixed_ticks": 0, "mixed_s": 0.0,
-                      "peak_page_util": 0.0, "peak_cmp_page_util": 0.0}
+        # the engine's own always-on registry: ``summary()``/``stats`` are
+        # views over its snapshot, so core accounting never depends on
+        # whether *global* telemetry (JSONL sink, dispatch counters,
+        # profiler annotations) is switched on.  Pass ``metrics=`` to share
+        # a registry across engines.
+        self.telemetry = (metrics if metrics is not None
+                          else telemetry.Registry(enabled=True, name="engine"))
+        self._tick_no = 0
+
+    # ------------------------------------------------ telemetry shortcuts
+    def _count(self, name: str, n: float = 1, **labels) -> None:
+        self.telemetry.counter(name, **labels).inc(n)
+
+    def _tick_accounting(self, kind: str, seconds: float) -> None:
+        self._count("engine_ticks_total", kind=kind)
+        self._count("engine_tick_seconds_total", seconds, kind=kind)
+
+    @property
+    def stats(self) -> dict:
+        """Legacy stats-dict view, derived from the telemetry snapshot
+        (same keys as the pre-telemetry ad-hoc dict)."""
+        snap = self.telemetry.snapshot()
+        cv, gs = telemetry.counter_value, telemetry.gauge_stats
+        return {
+            "decoded_tokens": int(cv(snap, "engine_decoded_tokens_total")),
+            "decode_ticks": int(cv(snap, "engine_ticks_total", kind="decode")),
+            "decode_s": cv(snap, "engine_tick_seconds_total", kind="decode"),
+            "prefill_tokens": int(cv(snap, "engine_prefill_tokens_total")),
+            "prefill_s": cv(snap, "engine_tick_seconds_total",
+                            kind="prefill"),
+            "mixed_ticks": int(cv(snap, "engine_ticks_total", kind="mixed")),
+            "mixed_s": cv(snap, "engine_tick_seconds_total", kind="mixed"),
+            "peak_page_util": gs(snap, "engine_page_util", pool="raw")["max"],
+            "peak_cmp_page_util": gs(snap, "engine_page_util",
+                                     pool="cmp")["max"],
+        }
 
     # ------------------------------------------------------------- intake
     def submit(self, prompt, max_new: int = 16, eos_id: int | None = None
@@ -135,6 +171,9 @@ class Engine:
         page) and a later occupant never inherits the old last token."""
         self._last_tokens[req.slot] = 0
         self._pf_pos.pop(req.slot, None)
+        self._count("engine_finished_requests_total")
+        self.telemetry.event("request", rid=req.rid, prompt_len=req.prompt_len,
+                             new_tokens=req.num_out, **req.timeline())
         if self.on_finish is not None:
             self.on_finish(req)
 
@@ -145,11 +184,15 @@ class Engine:
             self.on_token(req, tok)
 
     def _track_util(self) -> dict:
+        """Per-tick samples: queue depth, slot occupancy, raw+compressed
+        page-pool utilization (gauges track last/min/max, so the summary's
+        peaks fall out of the snapshot)."""
         util = self.cache.utilization()
-        self.stats["peak_page_util"] = max(self.stats["peak_page_util"],
-                                           util["raw"])
-        self.stats["peak_cmp_page_util"] = max(
-            self.stats["peak_cmp_page_util"], util["cmp"])
+        self.telemetry.gauge("engine_page_util", pool="raw").set(util["raw"])
+        self.telemetry.gauge("engine_page_util", pool="cmp").set(util["cmp"])
+        self.telemetry.gauge("engine_queue_depth").set(self.scheduler.pending)
+        self.telemetry.gauge("engine_active_slots").set(
+            len(self.scheduler.active))
         return util
 
     # ------------------------------------------------------------ prefill
@@ -179,21 +222,29 @@ class Engine:
         last_logits = [None] * len(reqs)
         for kc in range(max_chunks):
             start = kc * c
-            logits, self.cache.data = self._prefill(
-                self.params, self.cache.data,
-                jnp.asarray(toks[:, start:start + c]),
-                jnp.full((bsz,), start, jnp.int32), length_j, tables)
+            with telemetry.span("engine.prefill_chunk",
+                                registry=self.telemetry):
+                logits, self.cache.data = self._prefill(
+                    self.params, self.cache.data,
+                    jnp.asarray(toks[:, start:start + c]),
+                    jnp.full((bsz,), start, jnp.int32), length_j, tables)
+            if kc == 0:                      # whole batch got its 1st chunk
+                t_chunk = time.time()
+                for r in reqs:
+                    if r.first_chunk_t is None:
+                        r.first_chunk_t = t_chunk
             for i in range(len(reqs)):
                 if kc == padded[i] // c - 1:     # chunk with the last token
                     last_logits[i] = logits[i, (lens[i] - 1) - start,
                                             :self.cfg.vocab]
-        for i, r in enumerate(reqs):
-            self.cache.lengths[r.slot] = lens[i]
-            tok = int(jnp.argmax(last_logits[i]))   # blocking host sync
-            self._emit(r, tok)
-            r.first_token_t = time.time()    # per request, post-sync
-            self.stats["prefill_tokens"] += lens[i]
-        self.stats["prefill_s"] += time.time() - t_start
+        with telemetry.span("engine.host_sync", registry=self.telemetry):
+            for i, r in enumerate(reqs):
+                self.cache.lengths[r.slot] = lens[i]
+                tok = int(jnp.argmax(last_logits[i]))   # blocking host sync
+                self._emit(r, tok)
+                r.first_token_t = time.time()    # per request, post-sync
+                self._count("engine_prefill_tokens_total", lens[i])
+        self._tick_accounting("prefill", time.time() - t_start)
 
     def _prefill_request(self, req: Request) -> None:
         """Single-request prefill (compat wrapper over the batched path)."""
@@ -214,18 +265,19 @@ class Engine:
         """One token for every active slot at its own position."""
         t0 = time.time()
         pos = jnp.asarray(self.cache.lengths, jnp.int32)
-        logits, self.cache.data = self._decode(
-            self.params, self.cache.data, jnp.asarray(self._last_tokens), pos,
-            self.cache.device_tables())
-        nxt = np.asarray(jnp.argmax(logits[:, :self.cfg.vocab], axis=-1),
-                         np.int32)
+        with telemetry.span("engine.decode", registry=self.telemetry):
+            logits, self.cache.data = self._decode(
+                self.params, self.cache.data, jnp.asarray(self._last_tokens),
+                pos, self.cache.device_tables())
+        with telemetry.span("engine.host_sync", registry=self.telemetry):
+            nxt = np.asarray(jnp.argmax(logits[:, :self.cfg.vocab], axis=-1),
+                             np.int32)
         for req in self.scheduler.active:
             s = req.slot
             self._emit(req, int(nxt[s]))
             self.cache.lengths[s] += 1
-            self.stats["decoded_tokens"] += 1
-        self.stats["decode_ticks"] += 1
-        self.stats["decode_s"] += time.time() - t0
+            self._count("engine_decoded_tokens_total")
+        self._tick_accounting("decode", time.time() - t0)
 
     # --------------------------------------------------------- fused tick
     def _prefill_tokens_in_flight(self) -> int:
@@ -241,9 +293,12 @@ class Engine:
     def _step_fused(self) -> dict:
         """ONE fused dispatch: a bounded prefill chunk for admitting slots +
         one decode token for active slots, co-scheduled."""
-        admitted = self.scheduler.admit(
-            self.admit_limit, token_budget=self.prefill_token_budget,
-            tokens_in_flight=self._prefill_tokens_in_flight())
+        with telemetry.span("engine.admit", registry=self.telemetry) as sp:
+            admitted = self.scheduler.admit(
+                self.admit_limit, token_budget=self.prefill_token_budget,
+                tokens_in_flight=self._prefill_tokens_in_flight())
+            sp.annotate(admitted=len(admitted))
+        self._count("engine_admitted_requests_total", len(admitted))
         for r in admitted:
             self._pf_pos[r.slot] = 0
         util = self._track_util()
@@ -273,51 +328,62 @@ class Engine:
             dec_active = np.zeros((bsz,), bool)
             for r in decoding:
                 dec_active[r.slot] = True
-            pf_logits, dec_logits, self.cache.data = self._mixed(
-                self.params, self.cache.data, jnp.asarray(pf_toks),
-                jnp.asarray(pf_t0), jnp.asarray(pf_len),
-                jnp.asarray(self._last_tokens),
-                jnp.asarray(self.cache.lengths, jnp.int32),
-                jnp.asarray(dec_active), self.cache.device_tables())
+            # the fused dispatch IS the tick's prefill-chunk phase (decode
+            # rides along in the same launch)
+            with telemetry.span("engine.prefill_chunk",
+                                registry=self.telemetry,
+                                fused=bool(decoding)) as sp:
+                sp.annotate(chunk_tokens=chunk_tokens)
+                pf_logits, dec_logits, self.cache.data = self._mixed(
+                    self.params, self.cache.data, jnp.asarray(pf_toks),
+                    jnp.asarray(pf_t0), jnp.asarray(pf_len),
+                    jnp.asarray(self._last_tokens),
+                    jnp.asarray(self.cache.lengths, jnp.int32),
+                    jnp.asarray(dec_active), self.cache.device_tables())
+            t_chunk = time.time()
+            for r in prefilling:             # chunk dispatched for these
+                if r.first_chunk_t is None:
+                    r.first_chunk_t = t_chunk
         else:   # steady-state decode: skip the (B, C) prefill sub-step
-            dec_logits, self.cache.data = self._decode(
-                self.params, self.cache.data, jnp.asarray(self._last_tokens),
-                jnp.asarray(self.cache.lengths, jnp.int32),
-                self.cache.device_tables())
+            with telemetry.span("engine.decode", registry=self.telemetry):
+                dec_logits, self.cache.data = self._decode(
+                    self.params, self.cache.data,
+                    jnp.asarray(self._last_tokens),
+                    jnp.asarray(self.cache.lengths, jnp.int32),
+                    self.cache.device_tables())
             pf_logits = None
 
-        # prefill progress: advance each slot one chunk; a slot whose chunk
-        # covered its last prompt token materializes its FIRST token now
-        for r in prefilling:
-            s, t0 = r.slot, self._pf_pos[r.slot]
-            self.stats["prefill_tokens"] += min(c, len(r.prompt) - t0)
-            if t0 + c >= len(r.prompt):
-                tok = int(jnp.argmax(                # blocking host sync
-                    pf_logits[s, (len(r.prompt) - 1) - t0, :self.cfg.vocab]))
-                del self._pf_pos[s]
-                self.cache.lengths[s] = len(r.prompt)
-                self._emit(r, tok)
-                r.first_token_t = time.time()    # per request, post-sync
-            else:
-                self._pf_pos[s] = t0 + c
-        if decoding:
-            nxt = np.asarray(jnp.argmax(dec_logits[:, :self.cfg.vocab],
-                                        axis=-1), np.int32)
-            for r in decoding:
-                s = r.slot
-                self._emit(r, int(nxt[s]))
-                self.cache.lengths[s] += 1
-                self.stats["decoded_tokens"] += 1
+        with telemetry.span("engine.host_sync", registry=self.telemetry):
+            # prefill progress: advance each slot one chunk; a slot whose
+            # chunk covered its last prompt token materializes its FIRST
+            # token now
+            for r in prefilling:
+                s, t0 = r.slot, self._pf_pos[r.slot]
+                self._count("engine_prefill_tokens_total",
+                            min(c, len(r.prompt) - t0))
+                if t0 + c >= len(r.prompt):
+                    tok = int(jnp.argmax(            # blocking host sync
+                        pf_logits[s, (len(r.prompt) - 1) - t0,
+                                  :self.cfg.vocab]))
+                    del self._pf_pos[s]
+                    self.cache.lengths[s] = len(r.prompt)
+                    self._emit(r, tok)
+                    r.first_token_t = time.time()    # per request, post-sync
+                else:
+                    self._pf_pos[s] = t0 + c
+            if decoding:
+                nxt = np.asarray(jnp.argmax(dec_logits[:, :self.cfg.vocab],
+                                            axis=-1), np.int32)
+                for r in decoding:
+                    s = r.slot
+                    self._emit(r, int(nxt[s]))
+                    self.cache.lengths[s] += 1
+                    self._count("engine_decoded_tokens_total")
 
         dt = time.time() - t_tick
-        if prefilling and decoding:
-            self.stats["mixed_ticks"] += 1
-            self.stats["mixed_s"] += dt
-        elif decoding:
-            self.stats["decode_ticks"] += 1
-            self.stats["decode_s"] += dt
-        else:
-            self.stats["prefill_s"] += dt
+        kind = ("mixed" if prefilling and decoding
+                else "decode" if decoding else "prefill")
+        self._tick_accounting(kind, dt)
         finished = self._finish_ready()
         return {"admitted": admitted, "finished": finished,
                 "active": len(self.scheduler.active),
@@ -326,7 +392,10 @@ class Engine:
 
     def _step_sequential(self) -> dict:
         """Legacy two-phase iteration: admit + full prefill, then decode."""
-        admitted = self.scheduler.admit(self.admit_limit)
+        with telemetry.span("engine.admit", registry=self.telemetry) as sp:
+            admitted = self.scheduler.admit(self.admit_limit)
+            sp.annotate(admitted=len(admitted))
+        self._count("engine_admitted_requests_total", len(admitted))
         self._prefill_requests(admitted)
         util = self._track_util()
         finished = self._finish_ready()       # requests done at prefill
@@ -339,7 +408,20 @@ class Engine:
 
     def step(self) -> dict:
         """One engine iteration (fused mixed tick unless ``fused=False``)."""
-        return self._step_fused() if self.fused else self._step_sequential()
+        self._tick_no += 1
+        with telemetry.span("engine.tick", registry=self.telemetry) as sp:
+            out = (self._step_fused() if self.fused
+                   else self._step_sequential())
+            sp.annotate(tick=self._tick_no)
+        self.telemetry.event(
+            "tick", tick=self._tick_no,
+            queue_depth=self.scheduler.pending,
+            active_slots=out["active"],
+            admitted=len(out["admitted"]), finished=len(out["finished"]),
+            page_util_raw=out["page_util"]["raw"],
+            page_util_cmp=out["page_util"]["cmp"],
+            prefill_chunk_tokens=out.get("prefill_chunk_tokens", 0))
+        return out
 
     def run(self, requests=None, *, max_steps: int | None = None) -> dict:
         """Drive until all traffic (queued + active) has drained."""
@@ -355,20 +437,38 @@ class Engine:
         return self.summary()
 
     def summary(self) -> dict:
-        s = self.stats
+        """Serving summary, derived from the telemetry snapshot (the keys
+        predate the telemetry subsystem and are kept byte-compatible —
+        ``serve_bench``/``check_regression`` gate on them)."""
+        snap = self.telemetry.snapshot()
+        cv, gs = telemetry.counter_value, telemetry.gauge_stats
+        tick_s = lambda kind: cv(snap, "engine_tick_seconds_total", kind=kind)
+        ticks = lambda kind: cv(snap, "engine_ticks_total", kind=kind)
+        decoded = int(cv(snap, "engine_decoded_tokens_total"))
+        prefill_tokens = int(cv(snap, "engine_prefill_tokens_total"))
         # overlapped accounting: during a mixed tick BOTH streams progress,
         # so each stream's throughput window includes mixed time
-        decode_window = s["decode_s"] + s["mixed_s"]
-        prefill_window = s["prefill_s"] + s["mixed_s"]
-        decode_ticks = s["decode_ticks"] + s["mixed_ticks"]
+        decode_window = tick_s("decode") + tick_s("mixed")
+        prefill_window = tick_s("prefill") + tick_s("mixed")
+        decode_ticks = ticks("decode") + ticks("mixed")
         return {
             "requests_finished": len(self.scheduler.finished),
-            "decoded_tokens": s["decoded_tokens"],
-            "decode_tokens_per_s": s["decoded_tokens"] / max(decode_window, 1e-9),
-            "prefill_tokens_per_s": s["prefill_tokens"] / max(prefill_window, 1e-9),
+            "decoded_tokens": decoded,
+            "decode_tokens_per_s": decoded / max(decode_window, 1e-9),
+            "prefill_tokens_per_s":
+                prefill_tokens / max(prefill_window, 1e-9),
             "decode_ms_per_tick": 1e3 * decode_window / max(decode_ticks, 1),
-            "mixed_ticks": s["mixed_ticks"],
-            "peak_page_util": s["peak_page_util"],
-            "peak_cmp_page_util": s["peak_cmp_page_util"],
-            "outputs": {r.rid: list(r.out) for r in self.scheduler.finished},
+            "mixed_ticks": int(ticks("mixed")),
+            "peak_page_util": gs(snap, "engine_page_util", pool="raw")["max"],
+            "peak_cmp_page_util": gs(snap, "engine_page_util",
+                                     pool="cmp")["max"],
+            # bounded retention: requests evicted past ``retain_outputs``
+            # keep counts + timeline but no token lists (see Scheduler)
+            "outputs": {r.rid: list(r.out) for r in self.scheduler.finished
+                        if not r.out_evicted},
         }
+
+    def timelines(self) -> dict:
+        """{rid: per-request timeline} for every finished request (retained
+        through output eviction — stamps are five floats)."""
+        return {r.rid: r.timeline() for r in self.scheduler.finished}

@@ -32,29 +32,57 @@ class Request:
     out: list = dataclasses.field(default_factory=list)
     state: str = "queued"                   # queued | active | done
     slot: Optional[int] = None
+    # ---- per-request timeline (host wall clocks, stamped in this order) --
     submit_t: float = dataclasses.field(default_factory=time.time)
+    admit_t: Optional[float] = None         # slot + pages granted
+    first_chunk_t: Optional[float] = None   # first prefill chunk dispatched
     first_token_t: Optional[float] = None   # stamped per request, AFTER its
     finish_t: Optional[float] = None        # first token is on host
+    # ---- bounded retention (see Scheduler.release) ----------------------
+    prompt_len: int = 0
+    n_out: Optional[int] = None             # token count kept after eviction
+    out_evicted: bool = False
 
     def __post_init__(self):
         self.prompt = np.asarray(self.prompt, np.int32).reshape(-1)
         if self.prompt.size == 0:
             raise ValueError("empty prompt")
+        self.prompt_len = int(self.prompt.size)
 
     @property
     def done(self) -> bool:
         return self.state == "done"
 
+    @property
+    def num_out(self) -> int:
+        """Output token count — survives token-list eviction."""
+        return self.n_out if self.out_evicted else len(self.out)
+
+    def timeline(self) -> dict:
+        """Stamped lifecycle events in order (absent stamps omitted):
+        submit <= admit <= first_chunk <= first_token <= finish."""
+        stamps = (("submit", self.submit_t), ("admit", self.admit_t),
+                  ("first_chunk", self.first_chunk_t),
+                  ("first_token", self.first_token_t),
+                  ("finish", self.finish_t))
+        return {k: t for k, t in stamps if t is not None}
+
 
 class Scheduler:
     """Maps queued requests onto cache slots; frees pages on completion."""
 
-    def __init__(self, cache: PagedNSACache, prefill_chunk: int):
+    def __init__(self, cache: PagedNSACache, prefill_chunk: int, *,
+                 retain_outputs: int | None = None):
         self.cache = cache
         self.prefill_chunk = prefill_chunk
         self.queue: collections.deque[Request] = collections.deque()
         self.slots: list[Request | None] = [None] * cache.n_slots
         self.finished: list[Request] = []
+        # bounded retention for long-running service loops: only the newest
+        # ``retain_outputs`` finished requests keep their token lists; older
+        # ones are evicted down to counts + timeline (None = keep all)
+        self.retain_outputs = retain_outputs
+        self._retained: collections.deque[Request] = collections.deque()
         # called with the request on release, after its slot/pages are freed
         # — the engine hooks this to zero the slot's per-slot decode state
         # (_last_tokens), so a recycled slot never inherits a stale token
@@ -132,6 +160,7 @@ class Scheduler:
                 break
             self.queue.popleft()
             req.state, req.slot = "active", slot
+            req.admit_t = time.time()
             self.slots[slot] = req
             admitted.append(req)
             in_flight += self.chunk_tokens(req)
@@ -143,6 +172,19 @@ class Scheduler:
         self.cache.free_slot(req.slot)
         self.slots[req.slot] = None
         self.finished.append(req)
+        # bounded retention: evict the oldest finished requests' token lists
+        # (prompt array included — the big allocations) past the cap, keeping
+        # counts + the timeline so summaries/latency percentiles still work.
+        # Without this an AsyncEngine serving indefinitely grows without
+        # bound (scheduler.finished is never pruned).
+        if self.retain_outputs is not None:
+            self._retained.append(req)
+            while len(self._retained) > self.retain_outputs:
+                old = self._retained.popleft()
+                old.n_out = len(old.out)
+                old.out = []
+                old.prompt = np.empty((0,), np.int32)
+                old.out_evicted = True
         if self.on_release is not None:
             self.on_release(req)
 

@@ -1,0 +1,317 @@
+"""Dependency-free process-local metrics: counters, gauges, histograms.
+
+Instruments live in a :class:`Registry`.  Two registries matter in practice:
+
+* the **global** registry (``telemetry.registry()``), disabled by default —
+  ``enable()`` turns it (and the optional JSONL event sink) on.  Library
+  code (attention dispatch counters, resolve-fallback events, span timing)
+  records here, so an un-instrumented run pays only a single attribute
+  check per call site (the disabled registry hands out no-op singletons);
+* **private** registries owned by long-lived components (the serving
+  ``Engine`` constructs one, always enabled) whose snapshots back
+  user-facing accounting (``Engine.summary()``) and therefore must not
+  depend on whether global telemetry is switched on.
+
+``snapshot()`` returns a plain nested dict (JSON-ready); ``exposition()``
+renders the Prometheus text format.  Events (span ends, per-tick samples,
+resolution fallbacks) stream to the process-wide JSONL sink when one is
+attached via ``enable(jsonl=...)``.
+"""
+from __future__ import annotations
+
+import json
+import threading
+import time
+from typing import Optional
+
+# span / latency histograms default to millisecond-scale exponential buckets
+DEFAULT_BUCKETS_MS = (0.1, 0.25, 0.5, 1.0, 2.5, 5.0, 10.0, 25.0, 50.0,
+                      100.0, 250.0, 500.0, 1000.0, 2500.0, 5000.0)
+
+
+def _label_key(labels: dict) -> str:
+    """Canonical '{k="v",...}' label string ('' for no labels); sorted so
+    the same label set always maps to the same series."""
+    if not labels:
+        return ""
+    return ",".join(f'{k}="{labels[k]}"' for k in sorted(labels))
+
+
+class Counter:
+    """Monotonically increasing float counter."""
+
+    __slots__ = ("name", "labels", "value")
+
+    def __init__(self, name: str, labels: dict):
+        self.name = name
+        self.labels = labels
+        self.value = 0.0
+
+    def inc(self, n: float = 1.0) -> None:
+        self.value += n
+
+
+class Gauge:
+    """Last-value gauge that also tracks min/max/sample-count, so peak
+    tracking (page utilization) needs no caller-side max() bookkeeping."""
+
+    __slots__ = ("name", "labels", "value", "vmin", "vmax", "samples")
+
+    def __init__(self, name: str, labels: dict):
+        self.name = name
+        self.labels = labels
+        self.value = 0.0
+        self.vmin = float("inf")
+        self.vmax = float("-inf")
+        self.samples = 0
+
+    def set(self, v: float) -> None:
+        v = float(v)
+        self.value = v
+        self.vmin = min(self.vmin, v)
+        self.vmax = max(self.vmax, v)
+        self.samples += 1
+
+    def stats(self) -> dict:
+        return {"last": self.value, "samples": self.samples,
+                "min": self.vmin if self.samples else 0.0,
+                "max": self.vmax if self.samples else 0.0}
+
+
+class Histogram:
+    """Cumulative-bucket histogram (Prometheus ``le`` convention)."""
+
+    __slots__ = ("name", "labels", "bounds", "counts", "count", "sum")
+
+    def __init__(self, name: str, labels: dict, bounds=DEFAULT_BUCKETS_MS):
+        self.name = name
+        self.labels = labels
+        self.bounds = tuple(bounds)
+        self.counts = [0] * (len(self.bounds) + 1)   # +Inf overflow bucket
+        self.count = 0
+        self.sum = 0.0
+
+    def observe(self, v: float) -> None:
+        v = float(v)
+        self.count += 1
+        self.sum += v
+        for i, b in enumerate(self.bounds):
+            if v <= b:
+                self.counts[i] += 1
+                return
+        self.counts[-1] += 1
+
+    def stats(self) -> dict:
+        cum, out = 0, {}
+        for b, c in zip(self.bounds, self.counts):
+            cum += c
+            out[str(b)] = cum
+        out["+Inf"] = self.count
+        return {"count": self.count, "sum": self.sum, "buckets": out}
+
+
+class _Noop:
+    """Shared no-op instrument: every mutator is a bound no-op, so the
+    disabled-telemetry cost of a call site is one attribute check plus one
+    no-op call."""
+
+    __slots__ = ()
+    value = 0.0
+
+    def inc(self, n: float = 1.0) -> None:
+        pass
+
+    def set(self, v: float) -> None:
+        pass
+
+    def observe(self, v: float) -> None:
+        pass
+
+    def stats(self) -> dict:
+        return {}
+
+
+NOOP = _Noop()
+
+
+class JsonlSink:
+    """Append-only JSONL event sink (one JSON object per line)."""
+
+    def __init__(self, path: str):
+        self.path = path
+        self._fh = open(path, "a", buffering=1)
+        self._lock = threading.Lock()
+
+    def emit(self, record: dict) -> None:
+        line = json.dumps(record, sort_keys=True, default=float)
+        with self._lock:
+            self._fh.write(line + "\n")
+
+    def close(self) -> None:
+        with self._lock:
+            if not self._fh.closed:
+                self._fh.close()
+
+
+class Registry:
+    """Process-local instrument registry.
+
+    ``counter`` / ``gauge`` / ``histogram`` are get-or-create by
+    ``(name, labels)``; when the registry is disabled they return the no-op
+    singleton instead, which is the whole disabled-mode cost model.
+    ``event()`` forwards a record to the process-wide JSONL sink (if one is
+    attached and global telemetry is on).
+    """
+
+    def __init__(self, enabled: bool = True, name: str = ""):
+        self.enabled = enabled
+        self.name = name
+        self._lock = threading.Lock()
+        self._counters: dict = {}
+        self._gauges: dict = {}
+        self._histograms: dict = {}
+
+    # ------------------------------------------------------- instruments
+    def _get(self, store: dict, cls, name: str, labels: dict, **kw):
+        key = (name, _label_key(labels))
+        inst = store.get(key)
+        if inst is None:
+            with self._lock:
+                inst = store.setdefault(key, cls(name, labels, **kw))
+        return inst
+
+    def counter(self, name: str, **labels) -> Counter:
+        if not self.enabled:
+            return NOOP
+        return self._get(self._counters, Counter, name, labels)
+
+    def gauge(self, name: str, **labels) -> Gauge:
+        if not self.enabled:
+            return NOOP
+        return self._get(self._gauges, Gauge, name, labels)
+
+    def histogram(self, name: str, *, buckets=DEFAULT_BUCKETS_MS,
+                  **labels) -> Histogram:
+        if not self.enabled:
+            return NOOP
+        return self._get(self._histograms, Histogram, name, labels,
+                         bounds=buckets)
+
+    # ------------------------------------------------------------ events
+    def event(self, kind: str, **fields) -> None:
+        """Stream one event record to the process-wide JSONL sink (no-op
+        without an attached sink).  Registry enablement does not gate this:
+        a private always-on registry's events still only flow when the user
+        asked for a sink."""
+        emit_event(kind, registry=self.name, **fields)
+
+    # ---------------------------------------------------------- read-out
+    def snapshot(self) -> dict:
+        """Plain-dict view: {counters|gauges|histograms: {name: {labelkey:
+        value|stats}}} — JSON-ready, stable key order left to the caller."""
+        snap = {"counters": {}, "gauges": {}, "histograms": {}}
+        for (name, lk), c in sorted(self._counters.items()):
+            snap["counters"].setdefault(name, {})[lk] = c.value
+        for (name, lk), g in sorted(self._gauges.items()):
+            snap["gauges"].setdefault(name, {})[lk] = g.stats()
+        for (name, lk), h in sorted(self._histograms.items()):
+            snap["histograms"].setdefault(name, {})[lk] = h.stats()
+        return snap
+
+    def exposition(self) -> str:
+        """Prometheus text exposition (stable, sorted — golden-testable)."""
+        lines = []
+        for (name, lk), c in sorted(self._counters.items()):
+            lines.append(f"# TYPE {name} counter")
+            lines.append(f"{name}{{{lk}}} {_fmt(c.value)}" if lk
+                         else f"{name} {_fmt(c.value)}")
+        for (name, lk), g in sorted(self._gauges.items()):
+            lines.append(f"# TYPE {name} gauge")
+            lines.append(f"{name}{{{lk}}} {_fmt(g.value)}" if lk
+                         else f"{name} {_fmt(g.value)}")
+        for (name, lk), h in sorted(self._histograms.items()):
+            lines.append(f"# TYPE {name} histogram")
+            cum = 0
+            for b, c in zip(h.bounds, h.counts):
+                cum += c
+                le = f'le="{b}"'
+                lines.append(f"{name}_bucket{{{_join(lk, f0=le)}}} {cum}")
+            le = 'le="+Inf"'
+            lines.append(f"{name}_bucket{{{_join(lk, f0=le)}}} {h.count}")
+            lines.append(f"{name}_sum{{{lk}}} {_fmt(h.sum)}" if lk
+                         else f"{name}_sum {_fmt(h.sum)}")
+            lines.append(f"{name}_count{{{lk}}} {h.count}" if lk
+                         else f"{name}_count {h.count}")
+        return "\n".join(lines) + ("\n" if lines else "")
+
+    def clear(self) -> None:
+        with self._lock:
+            self._counters.clear()
+            self._gauges.clear()
+            self._histograms.clear()
+
+
+def _fmt(v: float) -> str:
+    return str(int(v)) if float(v).is_integer() else repr(float(v))
+
+
+def _join(label_key: str, *, f0: str) -> str:
+    return f"{label_key},{f0}" if label_key else f0
+
+
+# ----------------------------------------------------- snapshot accessors
+def counter_value(snap: dict, name: str, **labels) -> float:
+    """Read one counter series out of a ``snapshot()`` dict (0.0 absent)."""
+    return snap.get("counters", {}).get(name, {}).get(_label_key(labels), 0.0)
+
+
+def gauge_stats(snap: dict, name: str, **labels) -> dict:
+    return snap.get("gauges", {}).get(name, {}).get(
+        _label_key(labels), {"last": 0.0, "min": 0.0, "max": 0.0,
+                             "samples": 0})
+
+
+# --------------------------------------------------------- global state
+_GLOBAL = Registry(enabled=False, name="global")
+_SINK: Optional[JsonlSink] = None
+
+
+def registry() -> Registry:
+    """The process-global registry (disabled until ``enable()``)."""
+    return _GLOBAL
+
+
+def enabled() -> bool:
+    return _GLOBAL.enabled
+
+
+def enable(jsonl: str | None = None) -> Registry:
+    """Turn global telemetry on; optionally attach a JSONL event sink."""
+    global _SINK
+    _GLOBAL.enabled = True
+    if jsonl is not None:
+        if _SINK is not None:
+            _SINK.close()
+        _SINK = JsonlSink(jsonl)
+    return _GLOBAL
+
+
+def disable() -> None:
+    """Turn global telemetry off and detach/close the JSONL sink."""
+    global _SINK
+    _GLOBAL.enabled = False
+    if _SINK is not None:
+        _SINK.close()
+        _SINK = None
+
+
+def sink() -> Optional[JsonlSink]:
+    return _SINK
+
+
+def emit_event(kind: str, **fields) -> None:
+    """Write one event to the JSONL sink, if telemetry is on and a sink is
+    attached.  Timestamped here so every record is self-describing."""
+    if _SINK is None or not _GLOBAL.enabled:
+        return
+    _SINK.emit({"kind": kind, "t": time.time(), **fields})

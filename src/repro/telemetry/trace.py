@@ -1,0 +1,105 @@
+"""Context-manager spans: wall-clock (and optionally device-synced) timing
+into metric registries, plus ``jax.profiler`` annotations so the same
+regions show up labeled in XLA profiles.
+
+A span records into up to two registries — an explicit one passed by the
+caller (e.g. the serving engine's private always-on registry) and the
+global registry when global telemetry is enabled — as a ``span_ms``
+histogram keyed by the span name, and emits a ``span`` event (name,
+duration, nesting depth, parent) to the JSONL sink.  When neither registry
+is live the span is a no-op that never reads the clock.
+
+``jax.named_scope`` is re-exported as :func:`named_scope` for labeling
+*traced* regions (Pallas kernel launches) inside jitted code; spans
+themselves wrap host-side regions with ``jax.profiler.TraceAnnotation``.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+import time
+
+import jax
+
+from repro.telemetry import metrics
+
+_STACK = threading.local()          # per-thread span nesting stack
+
+
+def _stack() -> list:
+    s = getattr(_STACK, "names", None)
+    if s is None:
+        s = _STACK.names = []
+    return s
+
+
+class SpanHandle:
+    """Yielded by :func:`span`: attach annotations or device-sync targets."""
+
+    __slots__ = ("name", "labels", "fields", "_sync")
+
+    def __init__(self, name: str, labels: dict):
+        self.name = name
+        self.labels = labels          # histogram series key (keep bounded!)
+        self.fields = {}              # event-only payload (any cardinality)
+        self._sync = None
+
+    def annotate(self, **fields) -> None:
+        """Attach event-only fields known at exit (e.g. a batch count).
+        These go to the JSONL event, NOT the histogram series key — so
+        unbounded values never explode metric cardinality."""
+        self.fields.update(fields)
+
+    def sync(self, tree):
+        """Mark ``tree`` (jax arrays / pytree) to be blocked on before the
+        end timestamp — device-synced timing instead of dispatch timing.
+        Returns ``tree`` so it drops into expressions."""
+        self._sync = tree
+        return tree
+
+
+_NOOP_HANDLE = SpanHandle("", {})
+
+
+def named_scope(name: str):
+    """Label a *traced* region (use inside jit around kernel launches)."""
+    return jax.named_scope(name)
+
+
+@contextlib.contextmanager
+def span(name: str, registry: metrics.Registry | None = None, **labels):
+    """Time a host-side region.
+
+    Records a ``span_ms`` histogram sample (keyed ``span=<name>`` plus any
+    ``labels``) into ``registry`` (if given and enabled) and into the global
+    registry (if globally enabled), emits a ``span`` JSONL event, and opens
+    a ``jax.profiler.TraceAnnotation`` so profiler captures show the region
+    under the same name.
+    """
+    targets = []
+    if registry is not None and registry.enabled:
+        targets.append(registry)
+    g = metrics.registry()
+    if g.enabled and g is not registry:
+        targets.append(g)
+    if not targets and metrics.sink() is None:
+        yield _NOOP_HANDLE
+        return
+
+    handle = SpanHandle(name, dict(labels))
+    stack = _stack()
+    parent = stack[-1] if stack else None
+    stack.append(name)
+    t0 = time.perf_counter()
+    try:
+        with jax.profiler.TraceAnnotation(name):
+            yield handle
+    finally:
+        if handle._sync is not None:
+            jax.block_until_ready(handle._sync)
+        dt_ms = (time.perf_counter() - t0) * 1e3
+        stack.pop()
+        for reg in targets:
+            reg.histogram("span_ms", span=name, **handle.labels).observe(dt_ms)
+        metrics.emit_event("span", name=name, ms=dt_ms, depth=len(stack),
+                           parent=parent, **handle.labels, **handle.fields)
