@@ -73,7 +73,8 @@ def _serve_metrics(doc: dict) -> tuple:
              "ttft_p50_s": 1e6, "ttft_p95_s": 1e6,
              "e2e_p50_s": 1e6, "e2e_p95_s": 1e6}
     lat = {k: float(r[k]) * s for k, s in scale.items() if r.get(k)}
-    thr = {k: float(r[k]) for k in ("decode_tok_s", "prefill_tok_s")
+    thr = {k: float(r[k]) for k in ("decode_tok_s", "prefill_tok_s",
+                                    "prefix_hit_rate", "page_saving_ratio")
            if r.get(k)}
     return lat, thr
 

@@ -42,26 +42,45 @@ def _pctl(values, q):
 def run_workload(cfg, *, slots, n_requests, min_prompt, max_prompt, new_tokens,
                  release_every, prefill_chunk=None, seed=0, quiet=False,
                  backend=None, fused=True, prefill_token_budget=None,
-                 engine_out: dict | None = None):
+                 prefix_cache=False, prompts=None, warmup_prompts=None,
+                 burst=False, engine_out: dict | None = None):
     """Release requests gradually; drive the engine until drained.
 
     Pass ``engine_out={}`` to receive the drained ``Engine`` under the
     ``"engine"`` key (its telemetry snapshot / timelines outlive the run).
+
+    ``prompts`` overrides the random workload with explicit token arrays
+    (the shared-prefix scenario runs the SAME prompts with the prefix cache
+    on and off and compares).  ``warmup_prompts`` are served to completion
+    before the measured workload (e.g. to materialize a common prefix in
+    the cache); ``burst=True`` submits all measured prompts up front so
+    they run concurrently instead of trickling in over ticks.
     """
     eng = Engine(cfg, n_slots=slots, max_len=max_prompt + new_tokens + 8,
                  prefill_chunk=prefill_chunk, backend=backend, fused=fused,
-                 prefill_token_budget=prefill_token_budget)
+                 prefill_token_budget=prefill_token_budget,
+                 prefix_cache=prefix_cache)
     if engine_out is not None:
         engine_out["engine"] = eng
     rng = np.random.default_rng(seed)
-    pending = [rng.integers(0, cfg.vocab, size=(int(rng.integers(
-        min_prompt, max_prompt + 1)),)) for _ in range(n_requests)]
+    if prompts is None:
+        pending = [rng.integers(0, cfg.vocab, size=(int(rng.integers(
+            min_prompt, max_prompt + 1)),)) for _ in range(n_requests)]
+    else:
+        pending = [np.asarray(p, np.int32) for p in prompts]
+    if warmup_prompts:
+        for p in warmup_prompts:
+            eng.submit(np.asarray(p, np.int32), max_new=1)
+        while not eng.scheduler.idle():
+            eng.step()
 
     reqs, tick = [], 0
     t0 = time.time()
     while pending or not eng.scheduler.idle():
-        if pending and tick % release_every == 0:   # one release per interval
-            reqs.append(eng.submit(pending.pop(0), max_new=new_tokens))
+        if pending and (burst or tick % release_every == 0):
+            n = len(pending) if burst else 1        # one release per interval
+            for _ in range(n):
+                reqs.append(eng.submit(pending.pop(0), max_new=new_tokens))
         eng.step()
         tick += 1
     wall = time.time() - t0
@@ -69,10 +88,11 @@ def run_workload(cfg, *, slots, n_requests, min_prompt, max_prompt, new_tokens,
     s = eng.summary()
     # per-request latencies from the corrected timestamps: first_token_t is
     # stamped per request AFTER its first token is on host, never one shared
-    # pre-sync stamp for an admission batch
-    lat = [r.finish_t - r.submit_t for r in eng.scheduler.finished]
-    ttft = [r.first_token_t - r.submit_t for r in eng.scheduler.finished
-            if r.first_token_t]
+    # pre-sync stamp for an admission batch (measured requests only — the
+    # warmup pass is excluded)
+    lat = [r.finish_t - r.submit_t for r in reqs if r.done]
+    ttft = [r.first_token_t - r.submit_t for r in reqs
+            if r.done and r.first_token_t]
     out = {
         "requests": len(reqs),
         # prompt_len (not len(r.prompt)): survives bounded-retention eviction
@@ -94,7 +114,11 @@ def run_workload(cfg, *, slots, n_requests, min_prompt, max_prompt, new_tokens,
         "e2e_p50_s": _pctl(lat, 50),
         "e2e_p95_s": _pctl(lat, 95),
         "total_new_tokens": s["decoded_tokens"] + len(reqs),
+        "prefix_hit_rate": s["prefix_hit_rate"],
+        "prefix_blocks_reused": s["prefix_blocks_reused"],
     }
+    if prompts is not None:      # parity scenarios compare exact tokens
+        out["outputs"] = [list(r.out) for r in reqs]
     if not quiet:
         print(f"[serve_bench] {len(reqs)} reqs, prompts "
               f"{min(out['prompt_lens'])}..{max(out['prompt_lens'])}, "
@@ -112,6 +136,58 @@ def run_workload(cfg, *, slots, n_requests, min_prompt, max_prompt, new_tokens,
               f"(mean {out['mean_latency_s']*1e3:.1f} ms)")
         print(f"  pages    {out['peak_page_util']:8.1%} raw / "
               f"{out['peak_cmp_page_util']:.1%} cmp peak pool utilization")
+    return out
+
+
+def run_shared_prefix(cfg, frac, *, slots, n_requests, min_prompt, max_prompt,
+                      new_tokens, release_every, seed=0, quiet=False,
+                      backend=None, fused=True, prefill_token_budget=None,
+                      engine_out: dict | None = None):
+    """A/B the prefix cache on a shared-prompt burst.
+
+    ``frac * max_prompt`` leading tokens are common to every prompt (plus a
+    private suffix of at least one token).  A warmup request materializes
+    the shared prefix, then all measured requests are submitted at once —
+    twice, with the prefix cache on and off — and the runs must produce
+    EXACTLY the same tokens.  Reports the shared run's metrics plus the
+    unshared peak raw-page utilization and the saving ratio.
+    """
+    rng = np.random.default_rng(seed)
+    shared_len = max(int(frac * max_prompt), 1)
+    lo = min(max(min_prompt, shared_len + 1), max_prompt)
+    shared = rng.integers(0, cfg.vocab, size=(shared_len,))
+    prompts = [np.concatenate([shared, rng.integers(0, cfg.vocab, size=(
+        int(rng.integers(lo, max_prompt + 1)) - shared_len,))])
+        for _ in range(n_requests)]
+    warmup = np.concatenate([shared, rng.integers(0, cfg.vocab, size=(1,))])
+    common = dict(slots=slots, n_requests=n_requests, min_prompt=lo,
+                  max_prompt=max_prompt, new_tokens=new_tokens,
+                  release_every=release_every, seed=seed, quiet=True,
+                  backend=backend, fused=fused,
+                  prefill_token_budget=prefill_token_budget,
+                  prompts=prompts, warmup_prompts=[warmup], burst=True)
+    on = run_workload(cfg, prefix_cache=True, engine_out=engine_out,
+                      **common)
+    off = run_workload(cfg, prefix_cache=False, **common)
+    if on["outputs"] != off["outputs"]:
+        raise AssertionError(
+            "prefix cache changed tokens: shared run must be bit-identical "
+            "to the unshared run")
+    out = dict(on, shared_prefix_frac=frac,
+               peak_page_util_unshared=off["peak_page_util"],
+               page_saving_ratio=(off["peak_page_util"]
+                                  / max(on["peak_page_util"], 1e-9)),
+               token_parity=True)
+    if not quiet:
+        print(f"[serve_bench] shared-prefix {frac:.0%}: {n_requests} reqs, "
+              f"{shared_len} common tokens, exact token parity OK")
+        print(f"  pages    {out['peak_page_util']:8.1%} shared vs "
+              f"{out['peak_page_util_unshared']:.1%} unshared peak raw "
+              f"({out['page_saving_ratio']:.2f}x saving)")
+        print(f"  prefix   {out['prefix_hit_rate']:8.1%} hit rate, "
+              f"{out['prefix_blocks_reused']} blocks reused")
+        print(f"  decode   {out['decode_tok_s']:8.1f} tok/s   "
+              f"prefill {out['prefill_tok_s']:.1f} tok/s")
     return out
 
 
@@ -140,6 +216,12 @@ def main():
     ap.add_argument("--prefill-token-budget", type=int, default=None,
                     help="cap on prefill chunk tokens per fused tick "
                          "(admission throttles to bound decode latency)")
+    ap.add_argument("--shared-prefix", type=float, default=0.0,
+                    metavar="FRAC",
+                    help="shared-prompt scenario: FRAC of max-prompt tokens "
+                         "common to every request; A/Bs the prefix cache "
+                         "against an unshared run (exact token parity "
+                         "enforced) and reports the page-saving ratio")
     ap.add_argument("--json-out", default=None,
                     help="write a BENCH_serve.json trajectory point here")
     ap.add_argument("--tiny", action="store_true",
@@ -173,15 +255,18 @@ def main():
     if not args.full_size:
         cfg = reduced(cfg)
     engines: dict = {}
-    out = run_workload(cfg, slots=args.slots, n_requests=args.requests,
-                       min_prompt=args.min_prompt, max_prompt=args.max_prompt,
-                       new_tokens=args.new_tokens,
-                       release_every=args.release_every,
-                       backend="paged_gather" if args.no_kernel
-                       else args.backend,
-                       fused=not args.sequential,
-                       prefill_token_budget=args.prefill_token_budget,
-                       engine_out=engines)
+    common = dict(slots=args.slots, n_requests=args.requests,
+                  min_prompt=args.min_prompt, max_prompt=args.max_prompt,
+                  new_tokens=args.new_tokens,
+                  release_every=args.release_every,
+                  backend="paged_gather" if args.no_kernel else args.backend,
+                  fused=not args.sequential,
+                  prefill_token_budget=args.prefill_token_budget,
+                  engine_out=engines)
+    if args.shared_prefix > 0:
+        out = run_shared_prefix(cfg, args.shared_prefix, **common)
+    else:
+        out = run_workload(cfg, **common)
     if args.json_out:
         write_results(args.json_out, "serve_bench",
                       dict(out, arch=args.arch, full_size=args.full_size))

@@ -23,16 +23,21 @@ def gather_rows(pool: jnp.ndarray, table: jnp.ndarray, positions: jnp.ndarray):
 
 
 def scatter_rows(pool: jnp.ndarray, table: jnp.ndarray, positions: jnp.ndarray,
-                 values: jnp.ndarray, valid: jnp.ndarray | None = None):
+                 values: jnp.ndarray, valid: jnp.ndarray | None = None,
+                 min_pos: jnp.ndarray | None = None):
     """Scatter token rows through per-slot page tables.
 
     pool: (N_pages, P, ...); table: (B, max_pages); positions: (B, M);
     values: (B, M, ...).  Rows with ``valid == False`` (or positions outside
-    the slot's range) are routed to dump page 0.
+    the slot's range) are routed to dump page 0.  ``min_pos`` (B,) is a
+    per-slot write floor: positions below it alias read-only shared prefix
+    pages (prefix cache) and are likewise dumped.
     """
     p = pool.shape[1]
     in_range = (positions >= 0) & (positions < table.shape[1] * p)
     ok = in_range if valid is None else (valid & in_range)
+    if min_pos is not None:
+        ok = ok & (positions >= jnp.reshape(min_pos, (-1, 1)))
     pos_c = jnp.clip(positions, 0, table.shape[1] * p - 1)
     pages = jnp.take_along_axis(table, pos_c // p, axis=1)         # (B, M)
     pages = jnp.where(ok, pages, 0)                                # dump page

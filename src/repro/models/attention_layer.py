@@ -318,10 +318,12 @@ def _paged_emit_cmp(p, cfg, layer_cache, tables, pos, active=None):
     layer_cache = dict(layer_cache)
     layer_cache["cmp_k_pages"] = scatter_rows(
         layer_cache["cmp_k_pages"], tables["cmp_table"], j[:, None],
-        ck[:, None], valid=has_new[:, None])
+        ck[:, None], valid=has_new[:, None],
+        min_pos=tables.get("cmp_write_floor"))
     layer_cache["cmp_v_pages"] = scatter_rows(
         layer_cache["cmp_v_pages"], tables["cmp_table"], j[:, None],
-        cv[:, None], valid=has_new[:, None])
+        cv[:, None], valid=has_new[:, None],
+        min_pos=tables.get("cmp_write_floor"))
     return layer_cache
 
 
@@ -348,10 +350,10 @@ def paged_attention_decode(p, x_t, layer_cache, tables, pos, cfg, *,
     layer_cache = dict(layer_cache)
     layer_cache["k_pages"] = scatter_rows(
         layer_cache["k_pages"], tables["page_table"], pos[:, None], k,
-        valid=kv_valid)
+        valid=kv_valid, min_pos=tables.get("write_floor"))
     layer_cache["v_pages"] = scatter_rows(
         layer_cache["v_pages"], tables["page_table"], pos[:, None], v,
-        valid=kv_valid)
+        valid=kv_valid, min_pos=tables.get("write_floor"))
 
     if cfg.attention == "nsa":
         layer_cache = _paged_emit_cmp(p, cfg, layer_cache, tables, pos,
@@ -416,10 +418,10 @@ def paged_attention_prefill_chunks(p, x_c, layer_cache, tables, t0, length,
     layer_cache = dict(layer_cache)
     layer_cache["k_pages"] = scatter_rows(
         layer_cache["k_pages"], tables["page_table"], pos_c, k,
-        valid=pos_c < length[:, None])
+        valid=pos_c < length[:, None], min_pos=tables.get("write_floor"))
     layer_cache["v_pages"] = scatter_rows(
         layer_cache["v_pages"], tables["page_table"], pos_c, v,
-        valid=pos_c < length[:, None])
+        valid=pos_c < length[:, None], min_pos=tables.get("write_floor"))
 
     s_max = tables["page_table"].shape[1] * cfg.nsa.block_size
     view_rows = jnp.arange(s_max)
@@ -450,9 +452,11 @@ def paged_attention_prefill_chunks(p, x_c, layer_cache, tables, t0, length,
         ck = ck.reshape((b, max_emit) + ck.shape[1:])              # (B,E,hk,d)
         cv = cv.reshape((b, max_emit) + cv.shape[1:])
         layer_cache["cmp_k_pages"] = scatter_rows(
-            layer_cache["cmp_k_pages"], tables["cmp_table"], js, ck, valid=ok)
+            layer_cache["cmp_k_pages"], tables["cmp_table"], js, ck, valid=ok,
+            min_pos=tables.get("cmp_write_floor"))
         layer_cache["cmp_v_pages"] = scatter_rows(
-            layer_cache["cmp_v_pages"], tables["cmp_table"], js, cv, valid=ok)
+            layer_cache["cmp_v_pages"], tables["cmp_table"], js, cv, valid=ok,
+            min_pos=tables.get("cmp_write_floor"))
 
         n_cmp_max = tables["cmp_table"].shape[1] * nsa.block_size
         cmp_rows = jnp.arange(n_cmp_max)

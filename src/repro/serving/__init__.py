@@ -1,8 +1,10 @@
 """repro.serving — paged NSA KV-cache + continuous-batching serving.
 
 Layout:
-  pages.py         fixed-size KV page pool + per-slot page tables
+  pages.py         ref-counted KV page pool (PageLease) + per-slot tables
   cache.py         PagedNSACache: raw-token and compressed-token pages
+  prefix.py        radix prefix cache: copy-on-write page sharing across
+                   requests with a common prompt prefix
   scheduler.py     admission queue (token-budget policy), slot recycling,
                    page reclamation
   engine.py        fused mixed tick: chunked prefill co-scheduled with
@@ -12,8 +14,10 @@ Layout:
 from repro.serving.async_engine import AsyncEngine
 from repro.serving.cache import PagedNSACache
 from repro.serving.engine import Engine
-from repro.serving.pages import PagePool, PageTable
+from repro.serving.pages import PageLease, PagePool, PageTable
+from repro.serving.prefix import PrefixCache, PrefixMatch
 from repro.serving.scheduler import Request, Scheduler
 
-__all__ = ["AsyncEngine", "Engine", "PagePool", "PageTable", "PagedNSACache",
-           "Request", "Scheduler"]
+__all__ = ["AsyncEngine", "Engine", "PageLease", "PagePool", "PageTable",
+           "PagedNSACache", "PrefixCache", "PrefixMatch", "Request",
+           "Scheduler"]

@@ -9,8 +9,24 @@ Two pools because the two token kinds grow at different rates: raw pages at
 1 row/token, compressed pages at 1 row per ``cmp_stride`` tokens.  Page size
 is ``nsa.block_size`` for both, so the NSA selected branch addresses physical
 pages directly.
+
+Allocation is a single two-pool transaction over :class:`PageLease` handles
+(both pools commit or neither does), and pages are ref-counted: a slot
+admitted against a cached prefix aliases the trie's physical pages for its
+leading table entries (see ``repro.serving.prefix``), copies the partially
+filled boundary compressed page (copy-on-write — partial pages are private
+by invariant), and allocates only the private remainder.  The device tables
+carry per-slot write floors so no write can land below the shared prefix.
+
+``views()`` is the one read accessor: device page tables for all slots, one
+slot, or a padded slot batch, optionally with dense gathered K/V for a
+layer.  The five pre-redesign spellings (``device_tables`` /
+``slot_tables`` / ``slot_tables_batch`` / ``gather_view`` /
+``gather_views``) remain as one-release deprecation shims.
 """
 from __future__ import annotations
+
+import warnings
 
 import numpy as np
 
@@ -57,6 +73,10 @@ class PagedNSACache:
         self.tables = [PageTable(self.max_pages) for _ in range(n_slots)]
         self.cmp_tables = [PageTable(self.max_cmp_pages) for _ in range(n_slots)]
         self.lengths = np.zeros((n_slots,), np.int64)   # tokens written
+        # radix prefix cache (repro.serving.prefix.PrefixCache); when set,
+        # alloc_slot accepts prefix matches and evicts LRU cached prefixes
+        # under pool pressure
+        self.prefix = None
 
         self.data = transformer.init_lm_paged_cache(
             cfg, self.num_pages, self.num_cmp_pages)
@@ -70,35 +90,74 @@ class PagedNSACache:
         cmp_tokens = self.cfg.nsa.num_cmp_blocks(capacity_tokens)
         return raw, _ceil_div(cmp_tokens, self.page_size)
 
-    def can_admit(self, capacity_tokens: int) -> bool:
+    def can_admit(self, capacity_tokens: int, prefix=None) -> bool:
         raw, cmp = self.pages_needed(capacity_tokens)
+        if prefix is not None:
+            raw -= len(prefix.raw_pages)
+            cmp -= len(prefix.cmp_pages)
         return (raw <= self.max_pages and cmp <= self.max_cmp_pages
                 and self.pool.can_alloc(raw) and self.cmp_pool.can_alloc(cmp))
 
-    def alloc_slot(self, slot: int, capacity_tokens: int) -> bool:
+    def alloc_slot(self, slot: int, capacity_tokens: int, *,
+                   prefix=None) -> bool:
         """Reserve the slot's full worst-case page budget up front (simple
-        admission control: an admitted request can never OOM mid-flight)."""
+        admission control: an admitted request can never OOM mid-flight).
+
+        One two-pool transaction: raw and compressed leases both commit or
+        neither does.  ``prefix`` (a pinned ``PrefixMatch``) aliases the
+        matched pages into the leading table entries instead of allocating
+        them, copies the boundary compressed page (copy-on-write), and is
+        CONSUMED either way — on failure its references are cancelled here.
+        """
         raw_n, cmp_n = self.pages_needed(capacity_tokens)
         if raw_n > self.max_pages or cmp_n > self.max_cmp_pages:
+            if prefix is not None:
+                prefix.cancel()
             raise ValueError(
                 f"request needs {raw_n} pages > slot capacity {self.max_pages} "
                 f"(max_len={self.max_len})")
-        raw = self.pool.alloc(raw_n)
-        if raw is None:
+        shared_raw = prefix.raw_pages if prefix is not None else []
+        shared_cmp = prefix.cmp_pages if prefix is not None else []
+        raw_need = raw_n - len(shared_raw)
+        cmp_need = cmp_n - len(shared_cmp)
+        # under pressure, reclaim LRU cached prefixes before giving up (the
+        # matched chain is ref-pinned, so evicting it only drops trie refs)
+        if self.prefix is not None and not (
+                self.pool.can_alloc(raw_need)
+                and self.cmp_pool.can_alloc(cmp_need)):
+            self.prefix.evict_for(raw_need, cmp_need)
+        raw_lease = self.pool.try_alloc(raw_need)
+        if raw_lease is None:
+            if prefix is not None:
+                prefix.cancel()
             return False
-        cmp = self.cmp_pool.alloc(cmp_n)
-        if cmp is None:
-            self.pool.free(raw)
+        cmp_lease = self.cmp_pool.try_alloc(cmp_need)
+        if cmp_lease is None:
+            raw_lease.release()
+            if prefix is not None:
+                prefix.cancel()
             return False
-        self.tables[slot].assign(raw)
-        self.cmp_tables[slot].assign(cmp)
+        raw_priv, cmp_priv = raw_lease.take(), cmp_lease.take()
+        if prefix is not None and prefix.cmp_boundary is not None:
+            # copy-on-write: the partially-filled trailing compressed page is
+            # always private — this slot's prefill keeps appending rows to it
+            self._copy_cmp_page(prefix.cmp_boundary, cmp_priv[0])
+            self.cmp_pool.release([prefix.cmp_boundary])
+        if prefix is not None:
+            prefix.consume()    # raw/cmp full refs now owned by the tables
+        self.tables[slot].assign(shared_raw + raw_priv,
+                                 shared=len(shared_raw))
+        self.cmp_tables[slot].assign(shared_cmp + cmp_priv,
+                                     shared=len(shared_cmp))
         self.lengths[slot] = 0
         self._tables_dirty = True
         return True
 
     def free_slot(self, slot: int) -> None:
-        self.pool.free(self.tables[slot].clear())
-        self.cmp_pool.free(self.cmp_tables[slot].clear())
+        """Drop the slot's reference on every page it mapped; pages shared
+        with the prefix cache (or other slots) stay allocated."""
+        self.pool.release(self.tables[slot].clear())
+        self.cmp_pool.release(self.cmp_tables[slot].clear())
         self.lengths[slot] = 0
         self._tables_dirty = True
 
@@ -106,65 +165,124 @@ class PagedNSACache:
         for s in range(self.n_slots):
             self.tables[s].clear()
             self.cmp_tables[s].clear()
+        if self.prefix is not None:
+            self.prefix.clear()
         self.pool.reset()
         self.cmp_pool.reset()
         self.lengths[:] = 0
         self._tables_dirty = True
 
+    def _copy_cmp_page(self, src: int, dst: int) -> None:
+        """Device copy of one compressed page (all layers, K and V)."""
+        layers = dict(self.data["layers"])
+        for key in ("cmp_k_pages", "cmp_v_pages"):
+            if key in layers:
+                layers[key] = layers[key].at[:, dst].set(layers[key][:, src])
+        self.data = dict(self.data, layers=layers)
+
     # ----------------------------------------------------------- device IO
-    def device_tables(self) -> dict:
-        """{"page_table": (B, max_pages), "cmp_table": (B, max_cmp_pages)}."""
-        if self._tables_dirty:
-            self._dev_tables = {
-                "page_table": tables_array(self.tables),
-                "cmp_table": tables_array(self.cmp_tables),
-            }
-            self._tables_dirty = False
-        return self._dev_tables
+    def views(self, slots=None, *, layer: int | None = None,
+              batch_size: int | None = None) -> dict:
+        """The one read accessor over the paged state.
 
-    def slot_tables(self, slot: int) -> dict:
-        dev = self.device_tables()
-        return {"page_table": dev["page_table"][slot],
-                "cmp_table": dev["cmp_table"][slot]}
+        ``slots``:
+          None       -> device tables for ALL slots (cached until dirty):
+                        {"page_table": (B, max_pages), "cmp_table":
+                        (B, max_cmp_pages), "write_floor": (B,),
+                        "cmp_write_floor": (B,)} — the operand of the decode
+                        / fused-tick jits.  Write floors mark the first
+                        writable row per slot (everything below is a shared
+                        prefix page, routed to the dump page on write).
+          int        -> the same dict with unbatched per-slot rows.
+          sequence   -> a batched dict for those slots, padded to
+                        ``batch_size`` with all-dump-page rows (inert
+                        slots) — the fixed-shape operand of the batched
+                        prefill jit.
 
-    def slot_tables_batch(self, slots, batch_size: int | None = None) -> dict:
-        """Batched {"page_table": (B, max_pages), "cmp_table": …} for the
-        given slots, padded to ``batch_size`` with all-dump-page rows (inert
-        slots) — the fixed-shape operand of the batched prefill jit."""
-        bsz = batch_size if batch_size is not None else len(slots)
-        if len(slots) > bsz:
-            raise ValueError(f"{len(slots)} slots exceed batch size {bsz}")
+        ``layer=k`` additionally materialises dense contiguous K/V (+ cmp)
+        views of layer ``k`` under "k"/"v" (+ "cmp_k"/"cmp_v") — the shape
+        the dense cache stores directly (test/debug path: decode proper
+        reads only the pages the NSA branches touch).
+        """
+        single = isinstance(slots, (int, np.integer))
+        if slots is None:
+            if self._tables_dirty:
+                self._dev_tables = self._build_tables(range(self.n_slots),
+                                                      self.n_slots)
+                self._tables_dirty = False
+            out = self._dev_tables
+            if layer is None:
+                return out
+        else:
+            idx = [int(slots)] if single else [int(s) for s in slots]
+            bsz = batch_size if batch_size is not None else len(idx)
+            if len(idx) > bsz:
+                raise ValueError(f"{len(idx)} slots exceed batch size {bsz}")
+            out = self._build_tables(idx, bsz)
+        if layer is not None:
+            out = dict(out, **self._gather_layer(out, layer))
+        if single:
+            out = {k: v[0] for k, v in out.items()}
+        return out
+
+    def _build_tables(self, slots, bsz: int) -> dict:
         pt = np.zeros((bsz, self.max_pages), np.int32)
         ct = np.zeros((bsz, self.max_cmp_pages), np.int32)
+        wf = np.zeros((bsz,), np.int32)
+        cwf = np.zeros((bsz,), np.int32)
         for i, s in enumerate(slots):
             pt[i] = self.tables[s].as_row()
             ct[i] = self.cmp_tables[s].as_row()
-        return {"page_table": jnp.asarray(pt), "cmp_table": jnp.asarray(ct)}
+            wf[i] = self.tables[s].shared * self.page_size
+            cwf[i] = self.cmp_tables[s].shared * self.page_size
+        return {"page_table": jnp.asarray(pt), "cmp_table": jnp.asarray(ct),
+                "write_floor": jnp.asarray(wf),
+                "cmp_write_floor": jnp.asarray(cwf)}
+
+    def _gather_layer(self, tables: dict, layer: int) -> dict:
+        lc = jax.tree.map(lambda a: a[layer], self.data["layers"])
+        rows = jnp.arange(self.max_pages * self.page_size)
+        gk = jax.vmap(gather_rows, in_axes=(None, 0, None))
+        out = {"k": gk(lc["k_pages"], tables["page_table"], rows),
+               "v": gk(lc["v_pages"], tables["page_table"], rows)}
+        if "cmp_k_pages" in lc:
+            crows = jnp.arange(self.max_cmp_pages * self.page_size)
+            out["cmp_k"] = gk(lc["cmp_k_pages"], tables["cmp_table"], crows)
+            out["cmp_v"] = gk(lc["cmp_v_pages"], tables["cmp_table"], crows)
+        return out
 
     def utilization(self) -> dict:
         return {"raw": self.pool.utilization(),
                 "cmp": self.cmp_pool.utilization()}
 
-    # -------------------------------------------------- contiguous views
+    # ----------------------------------------- deprecated view spellings
+    def _views_deprecated(self, old: str, *args, **kwargs):
+        warnings.warn(f"PagedNSACache.{old}() is deprecated; use "
+                      f"views(slots=..., layer=...)", DeprecationWarning,
+                      stacklevel=3)
+        return self.views(*args, **kwargs)
+
+    def device_tables(self) -> dict:
+        """Deprecated: ``views()``."""
+        return self._views_deprecated("device_tables")
+
+    def slot_tables(self, slot: int) -> dict:
+        """Deprecated: ``views(slot)``."""
+        return self._views_deprecated("slot_tables", slot)
+
+    def slot_tables_batch(self, slots, batch_size: int | None = None) -> dict:
+        """Deprecated: ``views(slots, batch_size=...)``."""
+        return self._views_deprecated("slot_tables_batch", slots,
+                                      batch_size=batch_size)
+
+    _DENSE_KEYS = ("k", "v", "cmp_k", "cmp_v")
+
     def gather_view(self, slot: int, layer: int = 0) -> dict:
-        """Dense (max_len, h_k, d) K/V (+ cmp) views of one slot — the shape
-        the dense cache stores directly.  Test/debug path: materialises the
-        whole slot, whereas decode reads only the pages the NSA branches
-        touch."""
-        return {k: v[0] for k, v in self.gather_views([slot], layer).items()}
+        """Deprecated: ``views(slot, layer=...)``."""
+        out = self._views_deprecated("gather_view", slot, layer=layer)
+        return {k: out[k] for k in self._DENSE_KEYS if k in out}
 
     def gather_views(self, slots, layer: int = 0) -> dict:
-        """Batched ``gather_view``: dense (B, max_len, h_k, d) K/V (+ cmp)
-        views for the given slots — the (B, …) shape the batched decode /
-        parity tests consume."""
-        t = self.slot_tables_batch(list(slots))
-        lc = jax.tree.map(lambda a: a[layer], self.data["layers"])
-        rows = jnp.arange(self.max_pages * self.page_size)
-        gk = jax.vmap(gather_rows, in_axes=(None, 0, None))
-        out = {"k": gk(lc["k_pages"], t["page_table"], rows),
-               "v": gk(lc["v_pages"], t["page_table"], rows)}
-        if "cmp_k_pages" in lc:
-            crows = jnp.arange(self.max_cmp_pages * self.page_size)
-            out["cmp_k"] = gk(lc["cmp_k_pages"], t["cmp_table"], crows)
-            out["cmp_v"] = gk(lc["cmp_v_pages"], t["cmp_table"], crows)
-        return out
+        """Deprecated: ``views(slots, layer=...)``."""
+        out = self._views_deprecated("gather_views", slots, layer=layer)
+        return {k: out[k] for k in self._DENSE_KEYS if k in out}

@@ -39,6 +39,7 @@ import jax.numpy as jnp
 from repro import telemetry
 from repro.models import build, transformer
 from repro.serving.cache import PagedNSACache
+from repro.serving.prefix import PrefixCache
 from repro.serving.scheduler import Request, Scheduler
 
 SUPPORTED_FAMILIES = ("lm", "moe")
@@ -55,6 +56,7 @@ class Engine:
                  prefill_token_budget: int | None = None,
                  fused: bool = True,
                  retain_outputs: int | None = 1024,
+                 prefix_cache: bool = False,
                  metrics: "telemetry.Registry | None" = None):
         if cfg.family not in SUPPORTED_FAMILIES:
             raise NotImplementedError(
@@ -83,8 +85,15 @@ class Engine:
         # chunk never exceeds the slot's addressable rows
         self.prefill_chunk = min(prefill_chunk or 4 * p,
                                  self.cache.max_pages * p)
+        # radix prefix cache (opt-in): admission matches prompts against it,
+        # matched blocks alias shared physical pages and skip prefill; the
+        # trie holds its own page references, so with it enabled pool.used
+        # stays > 0 after a drain until eviction/reset
+        self._prefix = PrefixCache(self.cache) if prefix_cache else None
+        self.cache.prefix = self._prefix
         self.scheduler = Scheduler(self.cache, self.prefill_chunk,
-                                   retain_outputs=retain_outputs)
+                                   retain_outputs=retain_outputs,
+                                   prefix=self._prefix)
         self.scheduler.on_release = self._on_release
         self.n_slots = n_slots
         # caps one step's admission batch (everything admitted together is
@@ -193,7 +202,25 @@ class Engine:
         self.telemetry.gauge("engine_queue_depth").set(self.scheduler.pending)
         self.telemetry.gauge("engine_active_slots").set(
             len(self.scheduler.active))
+        if self._prefix is not None:
+            self.telemetry.gauge("prefix_blocks_cached").set(
+                self._prefix.blocks_cached)
         return util
+
+    # ------------------------------------------------------- prefix cache
+    def _count_prefix_hits(self, admitted: list[Request]) -> None:
+        for r in admitted:
+            if r.cached_tokens:
+                self._count("prefix_cache_hit_total")
+                self._count("prefix_cache_blocks_reused_total",
+                            r.cached_tokens // self.cache.page_size)
+
+    def _register_prefix(self, req: Request) -> None:
+        """Index the request's fully-materialized prompt blocks (called once
+        its prefill completed — later requests sharing the prefix alias
+        these physical pages and skip the work)."""
+        if self._prefix is not None:
+            self._prefix.insert(req.prompt, req.slot)
 
     # ------------------------------------------------------------ prefill
     def _prefill_requests(self, reqs: list[Request]) -> None:
@@ -209,15 +236,20 @@ class Engine:
         c = self.prefill_chunk
         bsz = self.n_slots
         lens = [len(r.prompt) for r in reqs]
-        padded = [-(-n // c) * c for n in lens]
-        max_chunks = max(p // c for p in padded)
+        # prefix-cached tokens are already materialized in shared pages:
+        # each slot's chunk stream starts at its own absolute offset
+        skip = [r.cached_tokens for r in reqs]
+        rem = [n - s for n, s in zip(lens, skip)]      # >= 1 (match cap)
+        chunks = [-(-n // c) for n in rem]
+        max_chunks = max(chunks)
         toks = np.zeros((bsz, max_chunks * c), np.int32)
         length = np.zeros((bsz,), np.int32)
+        base = np.zeros((bsz,), np.int32)
         for i, r in enumerate(reqs):
-            toks[i, :lens[i]] = r.prompt
+            toks[i, :rem[i]] = r.prompt[skip[i]:]
             length[i] = lens[i]
-        tables = self.cache.slot_tables_batch([r.slot for r in reqs],
-                                              batch_size=bsz)
+            base[i] = skip[i]
+        tables = self.cache.views([r.slot for r in reqs], batch_size=bsz)
         length_j = jnp.asarray(length)
         last_logits = [None] * len(reqs)
         for kc in range(max_chunks):
@@ -227,23 +259,24 @@ class Engine:
                 logits, self.cache.data = self._prefill(
                     self.params, self.cache.data,
                     jnp.asarray(toks[:, start:start + c]),
-                    jnp.full((bsz,), start, jnp.int32), length_j, tables)
+                    jnp.asarray(base + start), length_j, tables)
             if kc == 0:                      # whole batch got its 1st chunk
                 t_chunk = time.time()
                 for r in reqs:
                     if r.first_chunk_t is None:
                         r.first_chunk_t = t_chunk
             for i in range(len(reqs)):
-                if kc == padded[i] // c - 1:     # chunk with the last token
-                    last_logits[i] = logits[i, (lens[i] - 1) - start,
+                if kc == chunks[i] - 1:          # chunk with the last token
+                    last_logits[i] = logits[i, (lens[i] - 1) - skip[i] - start,
                                             :self.cfg.vocab]
         with telemetry.span("engine.host_sync", registry=self.telemetry):
             for i, r in enumerate(reqs):
                 self.cache.lengths[r.slot] = lens[i]
+                self._register_prefix(r)
                 tok = int(jnp.argmax(last_logits[i]))   # blocking host sync
                 self._emit(r, tok)
                 r.first_token_t = time.time()    # per request, post-sync
-                self._count("engine_prefill_tokens_total", lens[i])
+                self._count("engine_prefill_tokens_total", rem[i])
         self._tick_accounting("prefill", time.time() - t_start)
 
     def _prefill_request(self, req: Request) -> None:
@@ -268,7 +301,7 @@ class Engine:
         with telemetry.span("engine.decode", registry=self.telemetry):
             logits, self.cache.data = self._decode(
                 self.params, self.cache.data, jnp.asarray(self._last_tokens),
-                pos, self.cache.device_tables())
+                pos, self.cache.views())
         with telemetry.span("engine.host_sync", registry=self.telemetry):
             nxt = np.asarray(jnp.argmax(logits[:, :self.cfg.vocab], axis=-1),
                              np.int32)
@@ -299,8 +332,10 @@ class Engine:
                 tokens_in_flight=self._prefill_tokens_in_flight())
             sp.annotate(admitted=len(admitted))
         self._count("engine_admitted_requests_total", len(admitted))
+        self._count_prefix_hits(admitted)
         for r in admitted:
-            self._pf_pos[r.slot] = 0
+            # prefill resumes past the prefix-cached tokens (0 on a miss)
+            self._pf_pos[r.slot] = r.cached_tokens
         util = self._track_util()
 
         c, bsz = self.prefill_chunk, self.n_slots
@@ -339,7 +374,7 @@ class Engine:
                     jnp.asarray(pf_t0), jnp.asarray(pf_len),
                     jnp.asarray(self._last_tokens),
                     jnp.asarray(self.cache.lengths, jnp.int32),
-                    jnp.asarray(dec_active), self.cache.device_tables())
+                    jnp.asarray(dec_active), self.cache.views())
             t_chunk = time.time()
             for r in prefilling:             # chunk dispatched for these
                 if r.first_chunk_t is None:
@@ -350,7 +385,7 @@ class Engine:
                     self.params, self.cache.data,
                     jnp.asarray(self._last_tokens),
                     jnp.asarray(self.cache.lengths, jnp.int32),
-                    self.cache.device_tables())
+                    self.cache.views())
             pf_logits = None
 
         with telemetry.span("engine.host_sync", registry=self.telemetry):
@@ -367,6 +402,7 @@ class Engine:
                                   :self.cfg.vocab]))
                     del self._pf_pos[s]
                     self.cache.lengths[s] = len(r.prompt)
+                    self._register_prefix(r)
                     self._emit(r, tok)
                     r.first_token_t = time.time()    # per request, post-sync
                 else:
@@ -396,6 +432,7 @@ class Engine:
             admitted = self.scheduler.admit(self.admit_limit)
             sp.annotate(admitted=len(admitted))
         self._count("engine_admitted_requests_total", len(admitted))
+        self._count_prefix_hits(admitted)
         self._prefill_requests(admitted)
         util = self._track_util()
         finished = self._finish_ready()       # requests done at prefill
@@ -451,6 +488,7 @@ class Engine:
         decode_window = tick_s("decode") + tick_s("mixed")
         prefill_window = tick_s("prefill") + tick_s("mixed")
         decode_ticks = ticks("decode") + ticks("mixed")
+        admitted = cv(snap, "engine_admitted_requests_total")
         return {
             "requests_finished": len(self.scheduler.finished),
             "decoded_tokens": decoded,
@@ -462,6 +500,13 @@ class Engine:
             "peak_page_util": gs(snap, "engine_page_util", pool="raw")["max"],
             "peak_cmp_page_util": gs(snap, "engine_page_util",
                                      pool="cmp")["max"],
+            # prefix cache (0 / absent-series defaults when disabled)
+            "prefix_hit_rate":
+                cv(snap, "prefix_cache_hit_total") / max(admitted, 1),
+            "prefix_blocks_reused":
+                int(cv(snap, "prefix_cache_blocks_reused_total")),
+            "prefix_blocks_cached":
+                int(gs(snap, "prefix_blocks_cached")["last"]),
             # bounded retention: requests evicted past ``retain_outputs``
             # keep counts + timeline but no token lists (see Scheduler)
             "outputs": {r.rid: list(r.out) for r in self.scheduler.finished

@@ -6,6 +6,13 @@ host-side (the scheduler runs on the host anyway); the device sees only
 int32 page-table arrays, so jitted model functions never recompile as
 traffic changes.
 
+Pages are REF-COUNTED: ``try_alloc`` hands out a :class:`PageLease` whose
+pages start at refcount 1, ``share(pages)`` adds a reference (prefix-cache
+sharing: N slots + the radix trie can all point at one physical copy), and
+``release(pages)`` drops one — a page returns to the free list only when its
+last reference goes.  The pre-lease ``alloc``/``free`` spellings remain as
+one-release deprecation shims.
+
 Page 0 of every pool is a reserved dump page: idle slots and masked writes
 are routed there, which keeps all scatters unconditional (no ragged shapes).
 
@@ -15,18 +22,59 @@ model layers use it too); re-exported here for convenience.
 from __future__ import annotations
 
 import collections
+import warnings
 
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core.paging import gather_rows, scatter_rows
 
-__all__ = ["PagePool", "PageTable", "tables_array", "gather_rows",
-           "scatter_rows"]
+__all__ = ["PageLease", "PagePool", "PageTable", "tables_array",
+           "gather_rows", "scatter_rows"]
+
+
+class PageLease:
+    """Handle over a batch of freshly allocated pages (refcount 1 each).
+
+    ``lease.pages`` is the page-id list; ``lease.release()`` drops the
+    lease's reference on every page exactly once (idempotent, so unwind
+    paths can call it unconditionally).  Ownership of individual references
+    can instead transfer to a page table — see ``PageLease.take()``.
+    """
+
+    __slots__ = ("pool", "_pages", "_live")
+
+    def __init__(self, pool: "PagePool", pages: list[int]):
+        self.pool = pool
+        self._pages = list(pages)
+        self._live = True
+
+    @property
+    def pages(self) -> list[int]:
+        return list(self._pages)
+
+    def __len__(self) -> int:
+        return len(self._pages)
+
+    def __iter__(self):
+        return iter(self._pages)
+
+    def take(self) -> list[int]:
+        """Transfer reference ownership out of the lease: the caller is now
+        responsible for ``pool.release(pages)``; a later ``lease.release()``
+        is a no-op."""
+        self._live = False
+        return list(self._pages)
+
+    def release(self) -> None:
+        """Drop the lease's reference on every page (idempotent)."""
+        if self._live:
+            self._live = False
+            self.pool.release(self._pages)
 
 
 class PagePool:
-    """Host-side allocator over a fixed set of physical pages."""
+    """Host-side ref-counted allocator over a fixed set of physical pages."""
 
     def __init__(self, num_pages: int, page_size: int):
         if num_pages < 2:
@@ -34,6 +82,7 @@ class PagePool:
         self.num_pages = num_pages
         self.page_size = page_size
         self._free = collections.deque(range(1, num_pages))
+        self._refs: dict[int, int] = {}          # page id -> live references
 
     @property
     def available(self) -> int:
@@ -49,37 +98,93 @@ class PagePool:
     def can_alloc(self, n: int) -> bool:
         return n <= len(self._free)
 
-    def alloc(self, n: int) -> list[int] | None:
-        """Pop ``n`` pages; None (and no side effect) if the pool is short."""
+    def refcount(self, page: int) -> int:
+        """Live references on ``page`` (0 = free / never allocated)."""
+        return self._refs.get(int(page), 0)
+
+    # ------------------------------------------------------------ leases
+    def try_alloc(self, n: int) -> PageLease | None:
+        """Pop ``n`` pages at refcount 1 behind a :class:`PageLease`;
+        None (and no side effect) if the pool is short."""
         if n > len(self._free):
             return None
-        return [self._free.popleft() for _ in range(n)]
-
-    def free(self, pages) -> None:
+        pages = [self._free.popleft() for _ in range(n)]
         for p in pages:
+            self._refs[p] = 1
+        return PageLease(self, pages)
+
+    def share(self, pages) -> None:
+        """Add one reference to each (already-allocated) page."""
+        for p in pages:
+            p = int(p)
+            if self._refs.get(p, 0) < 1:
+                raise ValueError(f"sharing unallocated page id {p}")
+            self._refs[p] += 1
+
+    def release(self, pages) -> None:
+        """Drop one reference per page; pages return to the free list only
+        at refcount zero (shared prefix pages survive slot release)."""
+        for p in pages:
+            p = int(p)
             if not 1 <= p < self.num_pages:
-                raise ValueError(f"freeing invalid page id {p}")
-            self._free.append(int(p))
+                raise ValueError(f"releasing invalid page id {p}")
+            refs = self._refs.get(p, 0)
+            if refs < 1:
+                raise ValueError(f"releasing page id {p} with no live refs")
+            if refs == 1:
+                del self._refs[p]
+                self._free.append(p)
+            else:
+                self._refs[p] = refs - 1
 
     def reset(self) -> None:
         self._free = collections.deque(range(1, self.num_pages))
+        self._refs.clear()
+
+    # ----------------------------------------------- deprecated spellings
+    def alloc(self, n: int) -> list[int] | None:
+        """Deprecated: use ``try_alloc`` (PageLease handle API)."""
+        warnings.warn(
+            "PagePool.alloc is deprecated; use try_alloc() -> PageLease "
+            "(refcount-aware)", DeprecationWarning, stacklevel=2)
+        lease = self.try_alloc(n)
+        return None if lease is None else lease.take()
+
+    def free(self, pages) -> None:
+        """Deprecated: use ``release`` (drops one reference per page)."""
+        warnings.warn(
+            "PagePool.free is deprecated; use release() (refcount-aware)",
+            DeprecationWarning, stacklevel=2)
+        self.release(pages)
 
 
 class PageTable:
-    """Per-slot logical-block -> physical-page mapping (host side)."""
+    """Per-slot logical-block -> physical-page mapping (host side).
+
+    ``shared`` counts the leading pages aliased from the prefix cache: they
+    are read-only for this slot (the device write path routes positions
+    below ``shared * page_size`` to the dump page), and ``clear()`` returns
+    them together with the private tail so each released reference is
+    dropped exactly once.
+    """
 
     def __init__(self, max_pages: int):
         self.max_pages = max_pages
         self.pages: list[int] = []
+        self.shared = 0                     # leading pages aliased (read-only)
 
-    def assign(self, pages: list[int]) -> None:
+    def assign(self, pages: list[int], shared: int = 0) -> None:
         if len(pages) > self.max_pages:
             raise ValueError(
                 f"{len(pages)} pages exceed slot capacity {self.max_pages}")
+        if not 0 <= shared <= len(pages):
+            raise ValueError(f"shared prefix {shared} out of range")
         self.pages = list(pages)
+        self.shared = shared
 
     def clear(self) -> list[int]:
         pages, self.pages = self.pages, []
+        self.shared = 0
         return pages
 
     def as_row(self) -> np.ndarray:

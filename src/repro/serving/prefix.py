@@ -1,0 +1,244 @@
+"""Radix-tree prefix cache: copy-on-write sharing of KV pages across requests.
+
+Production traffic is dominated by requests sharing a system prompt, and the
+paged NSA layout (page == one selected block) makes physical sharing clean:
+the kernels address KV only through per-slot page tables, so N requests with
+a common token prefix can point their leading table entries at ONE physical
+copy.  K/V rows are a pure function of (params, token, absolute position),
+so two slots whose prompts agree on the first ``k`` pages would compute
+byte-identical page contents — this module lets the second slot skip both
+the pages and the prefill work.
+
+Structure: a radix/trie over fully-materialized prompt blocks.  A node at
+depth ``k`` covers the prompt prefix of ``(k+1) * page_size`` tokens and is
+keyed by the raw bytes of block ``k``'s tokens (exact match — chaining
+through the tree encodes the prefix, so no hash-collision risk).  Each node
+records
+
+- ``raw_page``       — the physical raw-KV page holding block ``k``,
+- ``cmp_full_new``   — compressed-token pages COMPLETED at this depth
+  (every row's compression window ends inside the node's prefix, so the
+  page is immutable from here on and can be aliased outright),
+- ``cmp_boundary``   — the donor's partially-filled trailing compressed
+  page at this depth, if any.  Partial pages are never aliased: a matching
+  request copies the rows into a private page (copy-on-write at the
+  boundary block) because its own prefill will keep appending rows there.
+
+All referenced pages carry one trie reference in the pools' refcounts, so
+cached prefixes survive the donor slot's release; ``evict_lru`` drops
+least-recently-matched leaves when admission would otherwise fail.
+
+Write safety: a matching slot starts prefill AT the matched offset and
+decode writes land at ``pos >= prompt_len``, so no shared page is ever a
+scatter target; the page tables additionally carry per-slot write floors
+(``repro.core.paging.scatter_rows(min_pos=...)``) routing any write below
+the shared prefix to the dump page.
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+
+__all__ = ["PrefixCache", "PrefixMatch"]
+
+
+class _Node:
+    __slots__ = ("key", "parent", "children", "depth", "raw_page",
+                 "cmp_full_new", "cmp_boundary", "last_used")
+
+    def __init__(self, key, parent, depth, raw_page, cmp_full_new,
+                 cmp_boundary, last_used):
+        self.key = key                      # block-token bytes
+        self.parent = parent
+        self.children: dict[bytes, _Node] = {}
+        self.depth = depth                  # block index (0-based)
+        self.raw_page = raw_page
+        self.cmp_full_new = cmp_full_new    # list[int], completed cmp pages
+        self.cmp_boundary = cmp_boundary    # int | None, partial cmp page
+        self.last_used = last_used
+
+
+@dataclasses.dataclass
+class PrefixMatch:
+    """A matched (block-aligned) prompt prefix, with references pinned.
+
+    ``match()`` takes one reference on every returned page so eviction or a
+    donor release between match and admission cannot free them.  Exactly one
+    of ``PagedNSACache.alloc_slot(prefix=match)`` (which consumes it) or
+    ``cancel()`` must follow.
+    """
+    tokens: int                       # matched tokens (multiple of page_size)
+    raw_pages: list[int]              # aliased raw pages, one per block
+    cmp_pages: list[int]              # aliased FULL compressed pages
+    cmp_boundary: int | None          # donor page to copy-on-write, if any
+    _owner: "PrefixCache | None" = None
+    _live: bool = True
+
+    @property
+    def blocks(self) -> int:
+        return len(self.raw_pages)
+
+    def cancel(self) -> None:
+        """Drop the pinned references (no admission happened)."""
+        if self._live and self._owner is not None:
+            self._live = False
+            self._owner._release_match(self)
+
+    def consume(self) -> None:
+        """Mark references as transferred to the admitting slot's tables
+        (plus the boundary ref to the CoW copy step)."""
+        self._live = False
+
+
+class PrefixCache:
+    """Radix index from token-block prefixes to physical pages."""
+
+    def __init__(self, cache):
+        self.cache = cache                          # PagedNSACache
+        self.page_size = cache.page_size
+        self._clock = itertools.count()
+        self.root = _Node(None, None, -1, None, [], None, next(self._clock))
+        self.n_blocks = 0                           # == number of nodes
+
+    # ---------------------------------------------------------- geometry
+    def _ncmp(self, n_tokens: int) -> int:
+        """EXACT count of compressed tokens whose window lies entirely inside
+        the first ``n_tokens`` (0 below one window — unlike
+        ``num_cmp_blocks`` which floors at 1 for shape purposes)."""
+        nsa = self.cache.cfg.nsa
+        l, st = nsa.cmp_block_size, nsa.cmp_stride
+        return 0 if n_tokens < l else (n_tokens - l) // st + 1
+
+    def _cmp_full(self, n_tokens: int) -> int:
+        """Compressed pages completely filled by the first ``n_tokens``."""
+        return self._ncmp(n_tokens) // self.page_size
+
+    @property
+    def blocks_cached(self) -> int:
+        return self.n_blocks
+
+    # ------------------------------------------------------------- match
+    def _walk(self, prompt, max_blocks: int) -> list[_Node]:
+        p = self.page_size
+        chain, node = [], self.root
+        for k in range(max_blocks):
+            key = prompt[k * p:(k + 1) * p].tobytes()
+            child = node.children.get(key)
+            if child is None:
+                break
+            chain.append(child)
+            node = child
+        return chain
+
+    def match(self, prompt) -> PrefixMatch | None:
+        """Longest cached block-aligned prefix of ``prompt``, refs pinned.
+
+        Capped at ``len(prompt) - 1`` tokens rounded down to whole blocks:
+        at least one prompt token is always prefilled so the request's first
+        output token has logits to come from.
+        """
+        max_blocks = (len(prompt) - 1) // self.page_size
+        chain = self._walk(prompt, max_blocks)
+        if not chain:
+            return None
+        stamp = next(self._clock)
+        for n in chain:
+            n.last_used = stamp
+        raw = [n.raw_page for n in chain]
+        cmp_full = [pg for n in chain for pg in n.cmp_full_new]
+        boundary = chain[-1].cmp_boundary
+        self.cache.pool.share(raw)
+        self.cache.cmp_pool.share(cmp_full)
+        if boundary is not None:
+            self.cache.cmp_pool.share([boundary])
+        return PrefixMatch(tokens=len(chain) * self.page_size,
+                           raw_pages=raw, cmp_pages=cmp_full,
+                           cmp_boundary=boundary, _owner=self)
+
+    def _release_match(self, m: PrefixMatch) -> None:
+        self.cache.pool.release(m.raw_pages)
+        self.cache.cmp_pool.release(m.cmp_pages)
+        if m.cmp_boundary is not None:
+            self.cache.cmp_pool.release([m.cmp_boundary])
+
+    # ------------------------------------------------------------ insert
+    def insert(self, prompt, slot: int) -> int:
+        """Register ``slot``'s fully-materialized prompt blocks (call after
+        its prefill completed).  Existing nodes are left untouched (their
+        pages hold identical content by construction); new nodes pin one
+        trie reference on each page they name.  Returns #blocks added."""
+        p = self.page_size
+        raw_pages = self.cache.tables[slot].pages
+        cmp_pages = self.cache.cmp_tables[slot].pages
+        blocks = len(prompt) // p
+        node, added, stamp = self.root, 0, next(self._clock)
+        for k in range(blocks):
+            key = prompt[k * p:(k + 1) * p].tobytes()
+            child = node.children.get(key)
+            if child is None:
+                f_prev, f_here = self._cmp_full(k * p), self._cmp_full((k + 1) * p)
+                cmp_new = [int(g) for g in cmp_pages[f_prev:f_here]]
+                boundary = None
+                if (self._ncmp((k + 1) * p) > f_here * p
+                        and f_here < len(cmp_pages)):
+                    boundary = int(cmp_pages[f_here])
+                child = _Node(key, node, k, int(raw_pages[k]), cmp_new,
+                              boundary, stamp)
+                self.cache.pool.share([child.raw_page])
+                self.cache.cmp_pool.share(cmp_new)
+                if boundary is not None:
+                    self.cache.cmp_pool.share([boundary])
+                node.children[key] = child
+                self.n_blocks += 1
+                added += 1
+            else:
+                child.last_used = stamp
+            node = child
+        return added
+
+    # ---------------------------------------------------------- eviction
+    def _leaves(self) -> list[_Node]:
+        out, stack = [], list(self.root.children.values())
+        while stack:
+            n = stack.pop()
+            if n.children:
+                stack.extend(n.children.values())
+            else:
+                out.append(n)
+        return out
+
+    def _evict_node(self, n: _Node) -> None:
+        self.cache.pool.release([n.raw_page])
+        self.cache.cmp_pool.release(n.cmp_full_new)
+        if n.cmp_boundary is not None:
+            self.cache.cmp_pool.release([n.cmp_boundary])
+        del n.parent.children[n.key]
+        self.n_blocks -= 1
+
+    def evict_lru(self, n: int = 1) -> int:
+        """Evict up to ``n`` least-recently-matched leaf blocks (an evicted
+        leaf exposes its parent, so repeated calls peel whole chains).
+        Pages still referenced by live slots merely lose the trie reference.
+        Returns the number of blocks evicted."""
+        evicted = 0
+        while evicted < n:
+            leaves = self._leaves()
+            if not leaves:
+                break
+            self._evict_node(min(leaves, key=lambda x: x.last_used))
+            evicted += 1
+        return evicted
+
+    def evict_for(self, raw_needed: int, cmp_needed: int) -> bool:
+        """Drop LRU cached prefixes until the pools can cover the request
+        (called when ``can_admit`` would otherwise fail).  True on success."""
+        pool, cpool = self.cache.pool, self.cache.cmp_pool
+        while not (pool.can_alloc(raw_needed) and cpool.can_alloc(cmp_needed)):
+            if self.evict_lru(1) == 0:
+                return False
+        return True
+
+    def clear(self) -> None:
+        while self.evict_lru(self.n_blocks or 1) > 0:
+            pass
+        self.root.children.clear()

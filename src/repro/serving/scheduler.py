@@ -38,6 +38,9 @@ class Request:
     first_chunk_t: Optional[float] = None   # first prefill chunk dispatched
     first_token_t: Optional[float] = None   # stamped per request, AFTER its
     finish_t: Optional[float] = None        # first token is on host
+    # tokens satisfied from the prefix cache at admission (block-aligned);
+    # prefill starts here instead of 0, shrinking chunk accounting and TTFT
+    cached_tokens: int = 0
     # ---- bounded retention (see Scheduler.release) ----------------------
     prompt_len: int = 0
     n_out: Optional[int] = None             # token count kept after eviction
@@ -72,9 +75,12 @@ class Scheduler:
     """Maps queued requests onto cache slots; frees pages on completion."""
 
     def __init__(self, cache: PagedNSACache, prefill_chunk: int, *,
-                 retain_outputs: int | None = None):
+                 retain_outputs: int | None = None, prefix=None):
         self.cache = cache
         self.prefill_chunk = prefill_chunk
+        # optional repro.serving.prefix.PrefixCache: admit() matches each
+        # head-of-queue prompt against it so cached blocks skip prefill
+        self.prefix = prefix
         self.queue: collections.deque[Request] = collections.deque()
         self.slots: list[Request | None] = [None] * cache.n_slots
         self.finished: list[Request] = []
@@ -122,8 +128,9 @@ class Scheduler:
 
     def chunk_tokens(self, req: Request) -> int:
         """Prefill-chunk tokens one engine tick spends on this request (the
-        fused tick advances every prefilling slot by at most one chunk)."""
-        return min(self.prefill_chunk, len(req.prompt))
+        fused tick advances every prefilling slot by at most one chunk).
+        Prefix-cached tokens are never prefilled, so they don't count."""
+        return min(self.prefill_chunk, req.prompt_len - req.cached_tokens)
 
     # ---------------------------------------------------------- admission
     def admit(self, limit: int | None = None, *,
@@ -153,17 +160,27 @@ class Scheduler:
             except ValueError:
                 break
             req = self.queue[0]
+            # longest cached block-aligned prefix, refs pinned; exactly one
+            # of alloc_slot(prefix=match) / match.cancel() consumes it
+            match = (self.prefix.match(req.prompt)
+                     if self.prefix is not None else None)
+            cached = match.tokens if match is not None else 0
+            first_chunk = min(self.prefill_chunk, req.prompt_len - cached)
             if (token_budget is not None and in_flight > 0
-                    and in_flight + self.chunk_tokens(req) > token_budget):
+                    and in_flight + first_chunk > token_budget):
+                if match is not None:
+                    match.cancel()
                 break
-            if not self.cache.alloc_slot(slot, self.capacity_tokens(req)):
-                break
+            if not self.cache.alloc_slot(slot, self.capacity_tokens(req),
+                                         prefix=match):
+                break   # alloc_slot cancelled the match's pinned refs
             self.queue.popleft()
             req.state, req.slot = "active", slot
+            req.cached_tokens = cached
             req.admit_t = time.time()
             self.slots[slot] = req
             admitted.append(req)
-            in_flight += self.chunk_tokens(req)
+            in_flight += first_chunk
         return admitted
 
     def release(self, req: Request) -> None:

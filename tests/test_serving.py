@@ -46,19 +46,39 @@ def _dense_greedy(cfg, params, prompt, max_new, max_len=MAX_LEN):
 
 
 # ---------------------------------------------------------------- pages
-def test_page_pool_alloc_free_reset():
+def test_page_pool_lease_release_reset():
     pool = PagePool(num_pages=8, page_size=16)
     assert pool.available == 7          # page 0 reserved
-    a = pool.alloc(3)
-    b = pool.alloc(4)
+    a = pool.try_alloc(3)
+    b = pool.try_alloc(4)
     assert a is not None and b is not None and pool.available == 0
-    assert pool.alloc(1) is None        # exhausted, no side effect
-    pool.free(a)
+    assert pool.try_alloc(1) is None    # exhausted, no side effect
+    a.release()
     assert pool.available == 3 and pool.utilization() == pytest.approx(4 / 7)
+    a.release()                         # idempotent: refs dropped only once
+    assert pool.available == 3
+    taken = b.take()                    # ownership leaves the lease
+    b.release()                         # ...so this is a no-op
+    assert pool.available == 3
     with pytest.raises(ValueError):
-        pool.free([0])                  # dump page is not allocatable
+        pool.release([0])               # dump page is not allocatable
+    pool.release(taken)
+    assert pool.available == 7
     pool.reset()
     assert pool.available == 7
+
+
+def test_page_pool_deprecated_alloc_free_shims():
+    """The pre-lease spellings still work (one-release shims) and warn."""
+    pool = PagePool(num_pages=8, page_size=16)
+    with pytest.warns(DeprecationWarning, match="try_alloc"):
+        a = pool.alloc(3)
+    assert a is not None and pool.available == 4
+    with pytest.warns(DeprecationWarning, match="release"):
+        pool.free(a)
+    assert pool.available == 7
+    with pytest.warns(DeprecationWarning):
+        assert pool.alloc(8) is None    # exhaustion contract unchanged
 
 
 def test_cache_slot_lifecycle():
@@ -67,11 +87,41 @@ def test_cache_slot_lifecycle():
     assert cache.alloc_slot(0, 80)
     raw_used = cache.pool.used
     assert raw_used == -(-80 // cache.page_size)
-    table = cache.device_tables()["page_table"]
+    table = cache.views()["page_table"]
     assert int(table[0, 0]) != 0        # slot 0 mapped off the dump page
     assert int(table[1, 0]) == 0        # idle slot routes to the dump page
     cache.free_slot(0)
     assert cache.pool.used == 0 and cache.cmp_pool.used == 0
+
+
+def test_cache_deprecated_view_accessors():
+    """The five pre-``views()`` accessors warn and return the same payload."""
+    cfg = _cfg()
+    cache = PagedNSACache(cfg, n_slots=2, max_len=MAX_LEN)
+    assert cache.alloc_slot(0, 80) and cache.alloc_slot(1, 48)
+    with pytest.warns(DeprecationWarning, match="views"):
+        old = cache.device_tables()
+    new = cache.views()
+    np.testing.assert_array_equal(np.asarray(old["page_table"]),
+                                  np.asarray(new["page_table"]))
+    with pytest.warns(DeprecationWarning, match="views"):
+        old1 = cache.slot_tables(1)
+    np.testing.assert_array_equal(np.asarray(old1["page_table"]),
+                                  np.asarray(new["page_table"][1]))
+    with pytest.warns(DeprecationWarning, match="views"):
+        oldb = cache.slot_tables_batch([1], batch_size=2)
+    np.testing.assert_array_equal(np.asarray(oldb["page_table"][0]),
+                                  np.asarray(new["page_table"][1]))
+    assert not np.asarray(oldb["page_table"][1]).any()   # pad row -> dump
+    with pytest.warns(DeprecationWarning, match="views"):
+        gv = cache.gather_view(0, layer=0)
+    assert set(gv) == {"k", "v", "cmp_k", "cmp_v"}       # dense payload only
+    np.testing.assert_array_equal(
+        np.asarray(gv["k"]), np.asarray(cache.views(0, layer=0)["k"]))
+    with pytest.warns(DeprecationWarning, match="views"):
+        gvs = cache.gather_views([0, 1], layer=0)
+    np.testing.assert_array_equal(np.asarray(gvs["k"][0]),
+                                  np.asarray(gv["k"]))
 
 
 def test_scheduler_admit_limit():
@@ -139,7 +189,7 @@ def test_paged_matches_dense_logits(attention):
         pos = jnp.asarray(eng.cache.lengths, jnp.int32)
         logits, eng.cache.data = eng._decode(
             eng.params, eng.cache.data, jnp.asarray(eng._last_tokens), pos,
-            eng.cache.device_tables())
+            eng.cache.views())
         paged_logits.append(np.asarray(logits[req.slot, :cfg.vocab]))
         tok = int(jnp.argmax(logits[req.slot, :cfg.vocab]))
         toks.append(tok)
