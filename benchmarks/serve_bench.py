@@ -10,6 +10,12 @@ raw + compressed page-pool utilization.
 
 Run:  PYTHONPATH=src python benchmarks/serve_bench.py --arch codeqwen1.5-7b
 
+``--mesh DxM`` runs the same workload through the mesh-sharded engine
+(``repro.serving.sharded``): KV-head-sharded page pools over the model
+axis, slot-sharded engine replicas over data.  ``--metrics-port`` serves
+the engine telemetry registry as a Prometheus ``/metrics`` endpoint for
+the duration of the run.
+
 ``--json-out PATH`` writes a BENCH_serve.json trajectory point (shared
 writer in ``benchmarks/results.py``) — the CI bench-smoke job uploads it as
 a workflow artifact.
@@ -43,7 +49,8 @@ def run_workload(cfg, *, slots, n_requests, min_prompt, max_prompt, new_tokens,
                  release_every, prefill_chunk=None, seed=0, quiet=False,
                  backend=None, fused=True, prefill_token_budget=None,
                  prefix_cache=False, prompts=None, warmup_prompts=None,
-                 burst=False, engine_out: dict | None = None):
+                 burst=False, mesh=None, metrics_port=None,
+                 engine_out: dict | None = None):
     """Release requests gradually; drive the engine until drained.
 
     Pass ``engine_out={}`` to receive the drained ``Engine`` under the
@@ -59,9 +66,12 @@ def run_workload(cfg, *, slots, n_requests, min_prompt, max_prompt, new_tokens,
     eng = Engine(cfg, n_slots=slots, max_len=max_prompt + new_tokens + 8,
                  prefill_chunk=prefill_chunk, backend=backend, fused=fused,
                  prefill_token_budget=prefill_token_budget,
-                 prefix_cache=prefix_cache)
+                 prefix_cache=prefix_cache, mesh=mesh,
+                 metrics_port=metrics_port)
     if engine_out is not None:
         engine_out["engine"] = eng
+    if eng.metrics_server is not None and not quiet:
+        print(f"[serve_bench] metrics at {eng.metrics_server.url}")
     rng = np.random.default_rng(seed)
     if prompts is None:
         pending = [rng.integers(0, cfg.vocab, size=(int(rng.integers(
@@ -100,6 +110,8 @@ def run_workload(cfg, *, slots, n_requests, min_prompt, max_prompt, new_tokens,
         "decode_backend": resolve(
             eng.cfg.nsa, AttentionRequest(mode="paged_decode", paged=True)).name,
         "fused": fused,
+        "mesh": ("x".join(str(s) for s in mesh.devices.shape)
+                 if mesh is not None else None),
         "mixed_ticks": s["mixed_ticks"],
         "wall_s": wall,
         "decode_tok_s": s["decode_tokens_per_s"],
@@ -142,6 +154,7 @@ def run_workload(cfg, *, slots, n_requests, min_prompt, max_prompt, new_tokens,
 def run_shared_prefix(cfg, frac, *, slots, n_requests, min_prompt, max_prompt,
                       new_tokens, release_every, seed=0, quiet=False,
                       backend=None, fused=True, prefill_token_budget=None,
+                      mesh=None, metrics_port=None,
                       engine_out: dict | None = None):
     """A/B the prefix cache on a shared-prompt burst.
 
@@ -164,10 +177,11 @@ def run_shared_prefix(cfg, frac, *, slots, n_requests, min_prompt, max_prompt,
                   max_prompt=max_prompt, new_tokens=new_tokens,
                   release_every=release_every, seed=seed, quiet=True,
                   backend=backend, fused=fused,
-                  prefill_token_budget=prefill_token_budget,
+                  prefill_token_budget=prefill_token_budget, mesh=mesh,
                   prompts=prompts, warmup_prompts=[warmup], burst=True)
+    # metrics_port only on the measured run — a fixed port can't bind twice
     on = run_workload(cfg, prefix_cache=True, engine_out=engine_out,
-                      **common)
+                      metrics_port=metrics_port, **common)
     off = run_workload(cfg, prefix_cache=False, **common)
     if on["outputs"] != off["outputs"]:
         raise AssertionError(
@@ -206,6 +220,19 @@ def main():
     ap.add_argument("--backend", default=None,
                     help="paged-decode backend (registry name, e.g. "
                          "paged_kernel | paged_gather); default: cfg policy")
+    ap.add_argument("--mesh", default=None, metavar="DxM",
+                    help="shard the engine over a (data, model) mesh, e.g. "
+                         "2x4 (needs data*model devices; model must divide "
+                         "n_kv_heads, data must divide --slots)")
+    ap.add_argument("--heads", type=int, default=None,
+                    help="override n_heads (reduced runs; e.g. so the mesh "
+                         "model axis divides the head counts)")
+    ap.add_argument("--kv-heads", type=int, default=None,
+                    help="override n_kv_heads (reduced runs)")
+    ap.add_argument("--metrics-port", type=int, default=None,
+                    help="serve the engine telemetry registry at "
+                         "http://127.0.0.1:PORT/metrics for the run "
+                         "(0 = ephemeral port, printed at startup)")
     ap.add_argument("--no-kernel", action="store_true",
                     help="decode via the gather reference instead of the "
                          "Pallas paged-decode kernel (alias for "
@@ -252,8 +279,19 @@ def main():
         telemetry.enable(jsonl=args.telemetry_jsonl)
 
     cfg = get_config(args.arch)
+    head_overrides = {k: v for k, v in
+                      (("n_heads", args.heads), ("n_kv_heads", args.kv_heads))
+                      if v is not None}
     if not args.full_size:
-        cfg = reduced(cfg)
+        cfg = reduced(cfg, **head_overrides)
+    elif head_overrides:
+        import dataclasses
+        cfg = dataclasses.replace(cfg, **head_overrides)
+    mesh = None
+    if args.mesh is not None:
+        from repro.launch.mesh import make_mesh
+        d, m = (int(x) for x in args.mesh.lower().split("x"))
+        mesh = make_mesh((d, m), ("data", "model"))
     engines: dict = {}
     common = dict(slots=args.slots, n_requests=args.requests,
                   min_prompt=args.min_prompt, max_prompt=args.max_prompt,
@@ -262,6 +300,7 @@ def main():
                   backend="paged_gather" if args.no_kernel else args.backend,
                   fused=not args.sequential,
                   prefill_token_budget=args.prefill_token_budget,
+                  mesh=mesh, metrics_port=args.metrics_port,
                   engine_out=engines)
     if args.shared_prefix > 0:
         out = run_shared_prefix(cfg, args.shared_prefix, **common)

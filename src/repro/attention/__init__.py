@@ -5,9 +5,9 @@ registry (:func:`register_backend` / :func:`resolve` /
 :func:`list_backends`), and the :class:`KernelPolicy` implementation bundle
 split out of :class:`~repro.core.nsa_config.NSAConfig`.
 
-All string/bool implementation dispatch lives inside this package; the old
-NSAConfig ``kernel`` / ``selected_impl`` / ``paged_kernel`` and the
-``use_kernel`` bool spellings survive one release as deprecation shims.
+All string/bool implementation dispatch lives inside this package; pick
+backends with ``KernelPolicy`` (or a ``backend=`` registry name at the call
+site), never with config booleans.
 """
 from repro.core.nsa_config import KernelPolicy, NSAConfig
 

@@ -14,16 +14,10 @@ Notation follows the paper (Table 1):
   T       number of selected KV blocks per query token (``num_selected``)
   B_K     KV block size (``block_size``)
   B_Q     FSA query-batch (query-block) size (``q_block_size``)
-
-Deprecated spellings (one release of warnings, mapped onto the policy):
-  NSAConfig(kernel="fsa")          -> policy=KernelPolicy(backend="fsa")
-  NSAConfig(selected_impl="union") -> policy=KernelPolicy(backend="sparse_union")
-  NSAConfig(paged_kernel=True)     -> policy=KernelPolicy(paged_backend="paged_kernel")
 """
 from __future__ import annotations
 
 import dataclasses
-import warnings
 
 
 @dataclasses.dataclass(frozen=True)
@@ -48,8 +42,8 @@ class KernelPolicy:
     paged_slot_block: int = 0
 
 
-# deprecated NSAConfig(selected_impl=...) values -> registry backend names
-# (public: repro.attention.api derives its legacy-alias table from this)
+# legacy selected_impl values -> registry backend names (public:
+# repro.attention.api derives its legacy-alias table from this)
 SELECTED_IMPL_TO_BACKEND = {"union": "sparse_union", "gather": "sparse_gather"}
 
 
@@ -78,12 +72,9 @@ class NSAConfig:
                  window_size: int = 512, num_init_blocks: int = 1,
                  num_local_blocks: int = 2, min_seq_for_sparse: int = 256,
                  policy: KernelPolicy | None = None,
-                 # policy passthroughs (current spellings, no warning)
+                 # policy passthroughs (tuning knobs land on self.policy)
                  q_block_size: int | None = None, interpret: bool | None = None,
-                 paged_slot_block: int | None = None,
-                 # deprecated spellings (one release of warnings)
-                 kernel: str | None = None, selected_impl: str | None = None,
-                 paged_kernel: bool | None = None):
+                 paged_slot_block: int | None = None):
         for name, val in (("block_size", block_size),
                           ("num_selected", num_selected),
                           ("cmp_block_size", cmp_block_size),
@@ -102,34 +93,6 @@ class NSAConfig:
             over["interpret"] = interpret
         if paged_slot_block is not None:
             over["paged_slot_block"] = paged_slot_block
-        if kernel is not None and selected_impl is not None:
-            # historically independent axes (kernel path vs sparse path);
-            # both map onto the single policy.backend slot now, so a silent
-            # winner would mis-translate the config
-            raise ValueError(
-                "NSAConfig got both deprecated kernel= and selected_impl=; "
-                "they map onto the single KernelPolicy.backend — pass "
-                "policy=KernelPolicy(backend=...) with the one you mean")
-        if selected_impl is not None:
-            warnings.warn(
-                "NSAConfig(selected_impl=...) is deprecated; use "
-                "policy=KernelPolicy(backend='sparse_union'|'sparse_gather')",
-                DeprecationWarning, stacklevel=2)
-            over["backend"] = SELECTED_IMPL_TO_BACKEND[selected_impl]
-        if kernel is not None:
-            warnings.warn(
-                "NSAConfig(kernel=...) is deprecated; use "
-                "policy=KernelPolicy(backend=<registry name>)",
-                DeprecationWarning, stacklevel=2)
-            over["backend"] = kernel    # names coincide with registry names
-        if paged_kernel is not None:
-            warnings.warn(
-                "NSAConfig(paged_kernel=...) is deprecated; use "
-                "policy=KernelPolicy(paged_backend="
-                "'paged_kernel'|'paged_gather')",
-                DeprecationWarning, stacklevel=2)
-            over["paged_backend"] = ("paged_kernel" if paged_kernel
-                                     else "paged_gather")
         if over:
             policy = dataclasses.replace(policy, **over)
         object.__setattr__(self, "policy", policy)
@@ -148,27 +111,6 @@ class NSAConfig:
     @property
     def paged_slot_block(self) -> int:
         return self.policy.paged_slot_block
-
-    # ------------------------------------------ deprecated views (warning)
-    @property
-    def kernel(self) -> str:
-        warnings.warn("NSAConfig.kernel is deprecated; read "
-                      "cfg.policy.backend", DeprecationWarning, stacklevel=2)
-        return self.policy.backend
-
-    @property
-    def selected_impl(self) -> str:
-        warnings.warn("NSAConfig.selected_impl is deprecated; read "
-                      "cfg.policy.backend", DeprecationWarning, stacklevel=2)
-        back = {v: k for k, v in SELECTED_IMPL_TO_BACKEND.items()}
-        return back.get(self.policy.backend, self.policy.backend)
-
-    @property
-    def paged_kernel(self) -> bool:
-        warnings.warn("NSAConfig.paged_kernel is deprecated; read "
-                      "cfg.policy.paged_backend", DeprecationWarning,
-                      stacklevel=2)
-        return self.policy.paged_backend != "paged_gather"
 
     # ------------------------------------------------------------- derived
     def num_kv_blocks(self, seq_len: int) -> int:

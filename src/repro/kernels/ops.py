@@ -9,10 +9,9 @@ the *dispatch* — which organization runs for which request — lives in
   selected_attention   — selected branch via the policy's Pallas kernel
                          (fsa | fsa_faithful | nsa | reference)
   full_attention / sliding_attention — Pallas flash wrappers
-  paged_decode_attention(_batched)   — paged serving decode; the deprecated
-                         ``use_kernel`` bool maps onto the ``paged_kernel``
-                         / ``paged_gather`` registry backends (one release
-                         of warnings)
+  paged_decode_attention(_batched)   — paged serving decode; ``backend=``
+                         picks the registry backend (``paged_kernel`` |
+                         ``paged_gather``; default: the gather reference)
 
 Forward runs the kernel; backward goes through the shared custom-VJP
 scaffolding in ``repro.attention.vjp`` — fused Pallas backward kernels
@@ -21,8 +20,6 @@ declare ``fused_backward``, the differentiable sparse-gather twin
 (identical math, XLA-differentiable) for the rest.
 """
 from __future__ import annotations
-
-import warnings
 
 from repro.core.nsa_config import NSAConfig
 
@@ -49,25 +46,8 @@ def sliding_attention(q, k, v, window: int, cfg: NSAConfig):
     return uattn.flash_attention(q, k, v, cfg, causal=True, window=window)
 
 
-def _paged_backend_name(cfg: NSAConfig, use_kernel, backend) -> str:
-    if use_kernel is not None:
-        if backend is not None:
-            raise ValueError("pass either backend= or the deprecated "
-                             "use_kernel bool, not both")
-        warnings.warn(
-            "the use_kernel bool of paged_decode_attention is deprecated; "
-            "pass backend='paged_kernel'|'paged_gather' (or set "
-            "KernelPolicy.paged_backend)", DeprecationWarning, stacklevel=3)
-        return "paged_kernel" if use_kernel else "paged_gather"
-    if backend is not None:
-        return backend
-    # historical default of this wrapper: the gather reference
-    return "paged_gather"
-
-
 def paged_decode_attention_batched(gates, q, k_pages, v_pages, page_tables,
                                    cmp_k, cmp_v, pos, cfg: NSAConfig, *,
-                                   use_kernel: bool | None = None,
                                    backend: str | None = None,
                                    block_s: int | None = None):
     """Batched multi-slot NSA paged decode (compat wrapper; see
@@ -79,7 +59,8 @@ def paged_decode_attention_batched(gates, q, k_pages, v_pages, page_tables,
     """
     from repro import attention as uattn
 
-    name = _paged_backend_name(cfg, use_kernel, backend)
+    # historical default of this wrapper: the gather reference
+    name = backend if backend is not None else "paged_gather"
     cache = {"page_tables": page_tables, "cmp_k": cmp_k, "cmp_v": cmp_v,
              "pos": pos}
     return uattn.nsa_attention(None, gates, q, k_pages, v_pages, cache,
@@ -89,15 +70,13 @@ def paged_decode_attention_batched(gates, q, k_pages, v_pages, page_tables,
 
 def paged_decode_attention(gates, q, k_pages, v_pages, page_table,
                            cmp_k, cmp_v, pos, cfg: NSAConfig, *,
-                           use_kernel: bool | None = None,
                            backend: str | None = None,
                            block_s: int | None = None):
     """One-token (single-slot) NSA paged decode; see
     ``paged_decode_attention_batched`` for the semantics.  q: (h, d);
     page_table: (max_pages,); cmp_k/cmp_v: (N_cmp_max, h_k, d*); pos: scalar.
     """
-    name = _paged_backend_name(cfg, use_kernel, backend)
     return paged_decode_attention_batched(
         gates[None], q[None], k_pages, v_pages, page_table[None],
-        cmp_k[None], cmp_v[None], pos[None], cfg, backend=name,
+        cmp_k[None], cmp_v[None], pos[None], cfg, backend=backend,
         block_s=block_s)[0]

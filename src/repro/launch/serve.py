@@ -45,8 +45,10 @@ class Engine:
         self.max_len = max_len
         self.paged = cfg.family in SUPPORTED_FAMILIES
         if self.paged:
+            # mesh= (("data","model") Mesh) routes to the sharded engine when
+            # it spans >1 device; a 1x1 mesh is the plain engine
             self._eng = PagedEngine(cfg, n_slots=batch_slots, max_len=max_len,
-                                    backend=backend)
+                                    backend=backend, mesh=mesh)
         else:
             self.model = build(cfg)
             self.params = self.model.init(jax.random.PRNGKey(0))
@@ -132,14 +134,23 @@ def main():
     ap.add_argument("--backend", default=None,
                     help="paged-decode backend (repro.attention registry "
                          "name, e.g. paged_kernel | paged_gather)")
+    ap.add_argument("--mesh", default=None, metavar="DxM",
+                    help="shard serving over a (data, model) mesh, e.g. 2x4 "
+                         "(needs data*model devices; model must divide "
+                         "n_kv_heads, data must divide --slots)")
     ap.add_argument("--reduced", action="store_true")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
     if args.reduced:
         cfg = reduced(cfg)
+    mesh = None
+    if args.mesh is not None:
+        from repro.launch.mesh import make_mesh
+        d, m = (int(x) for x in args.mesh.lower().split("x"))
+        mesh = make_mesh((d, m), ("data", "model"))
     eng = Engine(cfg, args.slots, args.prompt_len + args.new_tokens + 8,
-                 backend=args.backend)
+                 mesh=mesh, backend=args.backend)
     # dense fallback families decode one fixed batch: one request per slot
     n_req = (args.requests or 2 * args.slots) if eng.paged else args.slots
     rng = np.random.default_rng(0)

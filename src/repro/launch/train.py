@@ -19,6 +19,7 @@ import time
 import jax
 from jax.sharding import NamedSharding, PartitionSpec as P
 
+from repro import telemetry
 from repro.checkpoint import ckpt
 from repro.configs import get_config, reduced
 from repro.data.pipeline import DataConfig, SyntheticLM
@@ -87,7 +88,9 @@ def train_loop(cfg, *, steps: int, batch: int, seq: int, mesh,
                     jax.random.fold_in(jax.random.PRNGKey(8), step),
                     (batch, cfg.n_img_tokens, cfg.d_model),
                     jnp.dtype(cfg.dtype))
-            state, metrics = step_fn(state, batch_data)
+            with telemetry.span("train.step") as sp:
+                state, metrics = step_fn(state, batch_data)
+                sp.sync(metrics)  # device-synced ms, not dispatch latency
             loss = float(metrics["loss"])
             losses.append(loss)
             dt = time.time() - t0

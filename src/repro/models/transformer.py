@@ -314,21 +314,28 @@ def init_lm_paged_cache(cfg, num_pages: int, num_cmp_pages: int):
         cfg.n_layers)}
 
 
-def lm_paged_decode_step(params, cache, tokens, pos, tables, cfg):
+def lm_paged_decode_step(params, cache, tokens, pos, tables, cfg, *,
+                         reduce_fn=None):
     """Batched decode on paged storage.
 
     tokens: (B,) int32; pos: (B,) per-slot absolute positions; tables: the
     shared {"page_table", "cmp_table"} arrays.  Returns (logits (B,V), cache).
     The paged-decode backend (Pallas kernel vs gather reference) is resolved
     per ``cfg.nsa.policy.paged_backend`` inside ``repro.attention``.
+
+    ``reduce_fn`` (tensor-parallel serving): applied to each attention
+    output before the residual add.  Under ``shard_map`` with the heads
+    split over a mesh axis, the out-projection produces a partial sum —
+    pass ``lambda t: jax.lax.psum(t, "model")`` to complete it.
     """
+    rf = reduce_fn if reduce_fn is not None else (lambda t: t)
     x = params["embed"][tokens]
 
     def body(x, args):
         p_l, c_l = args
         h = rms_norm(x, p_l["ln1"], cfg.norm_eps)
         h, c_l = attn.paged_attention_decode(p_l["attn"], h, c_l, tables, pos, cfg)
-        x = x + h
+        x = x + rf(h)
         h = rms_norm(x, p_l["ln2"], cfg.norm_eps)
         if cfg.moe is not None:
             h2, _ = moe.apply_moe(p_l["moe"], h[:, None, :], cfg)
@@ -343,7 +350,8 @@ def lm_paged_decode_step(params, cache, tokens, pos, tables, cfg):
     return _head(params, x[:, None], cfg)[:, 0], cache
 
 
-def lm_paged_prefill_chunks(params, cache, tokens_c, t0, length, tables, cfg):
+def lm_paged_prefill_chunks(params, cache, tokens_c, t0, length, tables, cfg,
+                            *, reduce_fn=None):
     """Prefill one chunk for a BATCH of slots into paged storage.
 
     tokens_c: (B, C) int32, slot b's tokens at absolute positions
@@ -352,7 +360,11 @@ def lm_paged_prefill_chunks(params, cache, tokens_c, t0, length, tables, cfg):
     Returns (logits (B, C, V), cache) — the engine reads each slot's logit
     at its prompt's last position from the chunk that covers it.  Padding
     slots (length 0, all-dump-page tables) are inert.
+
+    ``reduce_fn``: see ``lm_paged_decode_step`` (tensor-parallel psum over
+    the partial attention out-projection).
     """
+    rf = reduce_fn if reduce_fn is not None else (lambda t: t)
     x = params["embed"][tokens_c]                          # (B, C, D)
 
     def body(x, args):
@@ -360,7 +372,7 @@ def lm_paged_prefill_chunks(params, cache, tokens_c, t0, length, tables, cfg):
         h = rms_norm(x, p_l["ln1"], cfg.norm_eps)
         h, c_l = attn.paged_attention_prefill_chunks(
             p_l["attn"], h, c_l, tables, t0, length, cfg)
-        x = x + h
+        x = x + rf(h)
         h = rms_norm(x, p_l["ln2"], cfg.norm_eps)
         if cfg.moe is not None:
             h, _ = moe.apply_moe(p_l["moe"], h, cfg)
@@ -375,7 +387,8 @@ def lm_paged_prefill_chunks(params, cache, tokens_c, t0, length, tables, cfg):
 
 
 def lm_paged_mixed_step(params, cache, pf_tokens, pf_t0, pf_len,
-                        dec_tokens, dec_pos, dec_active, tables, cfg):
+                        dec_tokens, dec_pos, dec_active, tables, cfg, *,
+                        reduce_fn=None):
     """ONE fused dispatch per engine tick: a bounded prefill chunk for
     admitting slots AND one decode token for active slots (vLLM-style
     continuous batching — decode never stalls behind a long co-admitted
@@ -389,8 +402,12 @@ def lm_paged_mixed_step(params, cache, pf_tokens, pf_t0, pf_len,
     routed to the dump page.  A slot is never both (disjoint masks), so the
     two sub-steps share ``tables`` and the per-layer page pools safely.
 
+    ``reduce_fn``: see ``lm_paged_decode_step`` (tensor-parallel psum over
+    the partial attention out-projections of BOTH sub-steps).
+
     Returns (pf_logits (B, C, V), dec_logits (B, V), cache).
     """
+    rf = reduce_fn if reduce_fn is not None else (lambda t: t)
     x_pf = params["embed"][pf_tokens]                       # (B, C, D)
     x_dec = params["embed"][dec_tokens]                     # (B, D)
 
@@ -401,7 +418,7 @@ def lm_paged_mixed_step(params, cache, pf_tokens, pf_t0, pf_len,
         h = rms_norm(x_pf, p_l["ln1"], cfg.norm_eps)
         h, c_l = attn.paged_attention_prefill_chunks(
             p_l["attn"], h, c_l, tables, pf_t0, pf_len, cfg)
-        x_pf = x_pf + h
+        x_pf = x_pf + rf(h)
         h = rms_norm(x_pf, p_l["ln2"], cfg.norm_eps)
         if cfg.moe is not None:
             h, _ = moe.apply_moe(p_l["moe"], h, cfg)
@@ -412,7 +429,7 @@ def lm_paged_mixed_step(params, cache, pf_tokens, pf_t0, pf_len,
         h = rms_norm(x_dec, p_l["ln1"], cfg.norm_eps)
         h, c_l = attn.paged_attention_decode(p_l["attn"], h, c_l, tables,
                                              dec_pos, cfg, active=dec_active)
-        x_dec = x_dec + h
+        x_dec = x_dec + rf(h)
         h = rms_norm(x_dec, p_l["ln2"], cfg.norm_eps)
         if cfg.moe is not None:
             h2, _ = moe.apply_moe(p_l["moe"], h[:, None, :], cfg)

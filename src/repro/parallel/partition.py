@@ -142,6 +142,54 @@ def batch_specs(batch, mesh):
     return jax.tree.map(spec, batch)
 
 
+# serving layout: pure tensor parallelism over "model" for the ATTENTION
+# projections only (head-sharded to match the KV-head-sharded page pools of
+# repro.serving.sharded), everything else replicated.  Unlike the training
+# tables above there is NO FSDP: every replica of the "data" axis runs an
+# independent engine over the full (replicated) non-attention weights, so a
+# decode tick needs exactly one collective — the psum completing w_o's
+# partial sum.
+_SERVE_BY_NAME: dict[str, tuple[int, tuple]] = {
+    "w_q": (2, (None, "model")),
+    "w_k": (2, (None, "model")),
+    "w_v": (2, (None, "model")),
+    "w_o": (2, ("model", None)),
+    "b_q": (1, ("model",)),
+    "b_k": (1, ("model",)),
+    "b_v": (1, ("model",)),
+}
+
+_SERVE_BY_PARENT: dict[tuple[str, str], tuple[int, tuple]] = {
+    # NSA compression MLPs are headless (dk, dk) — replicated; the gating
+    # projection (d, h, 3) is per-head — sharded with the heads
+    ("nsa", "w_k"): (2, (None, None)),
+    ("nsa", "w_v"): (2, (None, None)),
+    ("nsa", "w_gate"): (3, (None, "model", None)),
+}
+
+
+def _serve_leaf_spec(path: tuple[str, ...], x) -> P:
+    name = path[-1]
+    parent = path[-2] if len(path) > 1 else ""
+    rule = _SERVE_BY_PARENT.get((parent, name)) or _SERVE_BY_NAME.get(name)
+    if rule is None:
+        return P()          # embed/lm_head/norms/MLP/MoE: replicated
+    base_rank, spec = rule
+    pad = x.ndim - base_rank
+    assert pad >= 0, f"param {'/'.join(path)} rank {x.ndim} < base {base_rank}"
+    return P(*((None,) * pad + tuple(spec)))
+
+
+def serve_param_specs(params, mesh=None):
+    """PartitionSpec tree for the SERVING layout (see table above): attention
+    projections head-sharded over "model", all else replicated across the
+    whole mesh."""
+    return jax.tree_util.tree_map_with_path(
+        lambda kp, x: _filter_spec(_serve_leaf_spec(_path_str(kp), x),
+                                   x.shape, mesh),
+        params)
+
+
 def cache_specs_tree(cache, mesh):
     """Decode caches, identified by leaf name:
       k/v/cmp_k/cmp_v/cross_k/cross_v: (..., B, S, h_K, d) — batch on dp,

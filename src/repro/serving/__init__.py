@@ -9,6 +9,9 @@ Layout:
                    page reclamation
   engine.py        fused mixed tick: chunked prefill co-scheduled with
                    batched decode over per-slot positions, one dispatch/tick
+  sharded.py       ShardedEngine over a ("data","model") mesh: KV-head-
+                   sharded page pools, slot-sharded engine replicas, one
+                   shard_mapped dispatch (Engine(mesh=...) routes here)
   async_engine.py  asyncio request loop with per-request token streaming
 """
 from repro.serving.async_engine import AsyncEngine
@@ -17,7 +20,8 @@ from repro.serving.engine import Engine
 from repro.serving.pages import PageLease, PagePool, PageTable
 from repro.serving.prefix import PrefixCache, PrefixMatch
 from repro.serving.scheduler import Request, Scheduler
+from repro.serving.sharded import MeshLayoutError, ShardedEngine
 
-__all__ = ["AsyncEngine", "Engine", "PageLease", "PagePool", "PageTable",
-           "PagedNSACache", "PrefixCache", "PrefixMatch", "Request",
-           "Scheduler"]
+__all__ = ["AsyncEngine", "Engine", "MeshLayoutError", "PageLease",
+           "PagePool", "PageTable", "PagedNSACache", "PrefixCache",
+           "PrefixMatch", "Request", "Scheduler", "ShardedEngine"]

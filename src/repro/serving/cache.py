@@ -50,7 +50,7 @@ class PagedNSACache:
     """
 
     def __init__(self, cfg, n_slots: int, max_len: int, *,
-                 num_pages: int | None = None):
+                 num_pages: int | None = None, alloc_data: bool = True):
         if cfg.family in ("ssm", "hybrid", "encdec"):
             raise NotImplementedError(
                 f"paged KV serving needs an attention cache; family "
@@ -78,8 +78,11 @@ class PagedNSACache:
         # under pool pressure
         self.prefix = None
 
-        self.data = transformer.init_lm_paged_cache(
-            cfg, self.num_pages, self.num_cmp_pages)
+        # ``alloc_data=False``: bookkeeping-only cache (page pools, tables,
+        # lengths) with no device pytree — the sharded engine's per-replica
+        # caches share one global sharded pytree owned by the facade instead
+        self.data = (transformer.init_lm_paged_cache(
+            cfg, self.num_pages, self.num_cmp_pages) if alloc_data else None)
         self._tables_dirty = True
         self._dev_tables = None
 

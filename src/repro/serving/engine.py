@@ -29,7 +29,6 @@ from __future__ import annotations
 
 import dataclasses
 import time
-import warnings
 
 import numpy as np
 
@@ -46,31 +45,37 @@ SUPPORTED_FAMILIES = ("lm", "moe")
 
 
 class Engine:
-    """Paged continuous-batching engine for decoder-only attention models."""
+    """Paged continuous-batching engine for decoder-only attention models.
+
+    ``mesh=`` (a ``("data", "model")`` jax Mesh) routes construction to
+    ``repro.serving.sharded.ShardedEngine`` when the mesh spans more than one
+    device: KV-head-sharded page pools, slot-sharded engine replicas, one
+    ``shard_map``ped dispatch per tick.  A 1x1 mesh is byte-identical to the
+    plain single-device engine (this class).
+    """
+
+    def __new__(cls, *args, mesh=None, **kwargs):
+        if cls is Engine and mesh is not None and mesh.devices.size > 1:
+            from repro.serving.sharded import ShardedEngine
+            return super().__new__(ShardedEngine)
+        return super().__new__(cls)
 
     def __init__(self, cfg, n_slots: int = 4, max_len: int = 1024, *,
                  num_pages: int | None = None, prefill_chunk: int | None = None,
                  params=None, seed: int = 0, backend: str | None = None,
-                 use_kernel: bool | None = None,
+                 mesh=None,
                  admit_limit: int | None = None,
                  prefill_token_budget: int | None = None,
                  fused: bool = True,
                  retain_outputs: int | None = 1024,
                  prefix_cache: bool = False,
-                 metrics: "telemetry.Registry | None" = None):
+                 metrics: "telemetry.Registry | None" = None,
+                 metrics_port: int | None = None):
         if cfg.family not in SUPPORTED_FAMILIES:
             raise NotImplementedError(
                 f"paged serving supports families {SUPPORTED_FAMILIES}, got "
                 f"'{cfg.family}' (ssm/hybrid/encdec state is not paged KV)")
-        if use_kernel is not None:   # deprecated spelling of backend=
-            if backend is not None:
-                raise ValueError("pass either backend= or the deprecated "
-                                 "use_kernel flag, not both")
-            warnings.warn(
-                "the use_kernel flag of Engine is deprecated; pass "
-                "backend='paged_kernel'|'paged_gather'", DeprecationWarning,
-                stacklevel=2)
-            backend = "paged_kernel" if use_kernel else "paged_gather"
+        del mesh   # 1-device meshes are byte-identical to the plain engine
         if backend is not None:      # override cfg.nsa.policy.paged_backend
             cfg = dataclasses.replace(cfg, nsa=dataclasses.replace(
                 cfg.nsa, policy=dataclasses.replace(
@@ -79,7 +84,8 @@ class Engine:
         self.model = build(cfg)
         self.params = (params if params is not None
                        else self.model.init(jax.random.PRNGKey(seed)))
-        self.cache = PagedNSACache(cfg, n_slots, max_len, num_pages=num_pages)
+        self.cache = self._make_cache(cfg, n_slots, max_len,
+                                      num_pages=num_pages)
         p = self.cache.page_size
         # chunk-rounded prompts must fit one slot's page budget, so the
         # chunk never exceeds the slot's addressable rows
@@ -89,7 +95,7 @@ class Engine:
         # matched blocks alias shared physical pages and skip prefill; the
         # trie holds its own page references, so with it enabled pool.used
         # stays > 0 after a drain until eviction/reset
-        self._prefix = PrefixCache(self.cache) if prefix_cache else None
+        self._prefix = self._make_prefix() if prefix_cache else None
         self.cache.prefix = self._prefix
         self.scheduler = Scheduler(self.cache, self.prefill_chunk,
                                    retain_outputs=retain_outputs,
@@ -112,6 +118,33 @@ class Engine:
         self.on_finish = None
         self._pf_pos: dict[int, int] = {}    # slot -> next chunk offset
 
+        self._build_dispatch(cfg)
+        self._last_tokens = np.zeros((n_slots,), np.int32)
+        # the engine's own always-on registry: ``summary()``/``stats`` are
+        # views over its snapshot, so core accounting never depends on
+        # whether *global* telemetry (JSONL sink, dispatch counters,
+        # profiler annotations) is switched on.  Pass ``metrics=`` to share
+        # a registry across engines.
+        self.telemetry = (metrics if metrics is not None
+                          else telemetry.Registry(enabled=True, name="engine"))
+        self._tick_no = 0
+        # optional Prometheus pull endpoint over THIS engine's registry
+        # (port 0 picks a free one; see handle.port / handle.url)
+        self.metrics_server = (
+            telemetry.serve_metrics(metrics_port, registry=self.telemetry)
+            if metrics_port is not None else None)
+
+    # --------------------------------------------------- construction hooks
+    # Overridden by ``serving.sharded.ShardedEngine``: sharded cache facade,
+    # per-replica prefix router, shard_mapped dispatch.  The scheduler, tick
+    # loop, and accounting above them are shared verbatim.
+    def _make_cache(self, cfg, n_slots, max_len, *, num_pages):
+        return PagedNSACache(cfg, n_slots, max_len, num_pages=num_pages)
+
+    def _make_prefix(self):
+        return PrefixCache(self.cache)
+
+    def _build_dispatch(self, cfg) -> None:
         # cfg is closed over (static); cache buffers are donated per call
         self._decode = jax.jit(
             lambda params, data, toks, pos, tables:
@@ -130,15 +163,6 @@ class Engine:
                     params, data, pf_toks, pf_t0, pf_len, dec_toks, dec_pos,
                     dec_active, tables, cfg),
             donate_argnums=(1,))
-        self._last_tokens = np.zeros((n_slots,), np.int32)
-        # the engine's own always-on registry: ``summary()``/``stats`` are
-        # views over its snapshot, so core accounting never depends on
-        # whether *global* telemetry (JSONL sink, dispatch counters,
-        # profiler annotations) is switched on.  Pass ``metrics=`` to share
-        # a registry across engines.
-        self.telemetry = (metrics if metrics is not None
-                          else telemetry.Registry(enabled=True, name="engine"))
-        self._tick_no = 0
 
     # ------------------------------------------------ telemetry shortcuts
     def _count(self, name: str, n: float = 1, **labels) -> None:

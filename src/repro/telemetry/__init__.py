@@ -8,6 +8,10 @@
   wall-clock + optional device-sync timing, emitting to the registries and
   to ``jax.profiler`` so engine tick phases and Pallas kernel regions show
   up labeled in XLA profiles.
+* :mod:`repro.telemetry.pull` — :func:`serve_metrics`: a stdlib-only
+  ``GET /metrics`` HTTP endpoint rendering a registry's ``exposition()``
+  for real Prometheus scraping (``Engine(metrics_port=...)`` /
+  ``serve_bench --metrics-port``).
 
 Enable globally (e.g. in a bench or service entry point)::
 
@@ -34,6 +38,7 @@ from repro.telemetry.metrics import (
     registry,
     sink,
 )
+from repro.telemetry.pull import MetricsServer, serve_metrics
 from repro.telemetry.trace import SpanHandle, named_scope, span
 
 __all__ = [
@@ -42,6 +47,7 @@ __all__ = [
     "Gauge",
     "Histogram",
     "JsonlSink",
+    "MetricsServer",
     "NOOP",
     "Registry",
     "SpanHandle",
@@ -53,6 +59,7 @@ __all__ = [
     "gauge_stats",
     "named_scope",
     "registry",
+    "serve_metrics",
     "sink",
     "span",
 ]

@@ -1,0 +1,81 @@
+"""Prometheus pull endpoint: ``GET /metrics`` over the stdlib http.server.
+
+No dependencies — a daemon-threaded :class:`ThreadingHTTPServer` renders a
+:class:`~repro.telemetry.metrics.Registry`'s ``exposition()`` (Prometheus
+text format 0.0.4) on every scrape.  The registry is resolved per request,
+so a server bound to the (initially disabled) global registry starts
+serving real series the moment ``telemetry.enable()`` runs.
+
+::
+
+    handle = telemetry.serve_metrics(9090)          # global registry
+    handle = telemetry.serve_metrics(0, registry=engine.telemetry)
+    print(handle.url)                               # port 0 -> ephemeral
+    handle.stop()
+
+``Engine(metrics_port=...)`` / ``serve_bench --metrics-port`` expose the
+engine's always-on registry this way.
+"""
+from __future__ import annotations
+
+import threading
+from http.server import BaseHTTPRequestHandler, ThreadingHTTPServer
+
+from repro.telemetry import metrics
+
+__all__ = ["MetricsServer", "serve_metrics"]
+
+
+class _Handler(BaseHTTPRequestHandler):
+    server_version = "repro-metrics/0"
+
+    def do_GET(self):                                       # noqa: N802
+        if self.path.split("?", 1)[0].rstrip("/") not in ("", "/metrics"):
+            self.send_error(404, "try /metrics")
+            return
+        reg = self.server._registry
+        body = (reg if reg is not None else metrics.registry()
+                ).exposition().encode("utf-8")
+        self.send_response(200)
+        self.send_header("Content-Type",
+                         "text/plain; version=0.0.4; charset=utf-8")
+        self.send_header("Content-Length", str(len(body)))
+        self.end_headers()
+        self.wfile.write(body)
+
+    def log_message(self, *args):       # no per-scrape stderr chatter
+        pass
+
+
+class MetricsServer:
+    """Running /metrics endpoint; ``stop()`` to shut down.
+
+    ``port=0`` binds an ephemeral port — read it back from ``.port`` (the
+    pattern tests and multi-engine processes use).
+    """
+
+    def __init__(self, port: int = 0, registry=None,
+                 host: str = "127.0.0.1"):
+        self._httpd = ThreadingHTTPServer((host, port), _Handler)
+        self._httpd.daemon_threads = True
+        self._httpd._registry = registry
+        self.host = host
+        self.port = int(self._httpd.server_address[1])
+        self.url = f"http://{host}:{self.port}/metrics"
+        self._thread = threading.Thread(target=self._httpd.serve_forever,
+                                        name=f"metrics:{self.port}",
+                                        daemon=True)
+        self._thread.start()
+
+    def stop(self) -> None:
+        self._httpd.shutdown()
+        self._httpd.server_close()
+        self._thread.join(timeout=5)
+
+
+def serve_metrics(port: int = 0, registry=None,
+                  host: str = "127.0.0.1") -> MetricsServer:
+    """Start a /metrics HTTP endpoint serving ``registry`` (default: the
+    process-global registry, resolved per scrape).  Returns the running
+    :class:`MetricsServer` (``.port`` / ``.url`` / ``.stop()``)."""
+    return MetricsServer(port, registry=registry, host=host)

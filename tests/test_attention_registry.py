@@ -255,54 +255,23 @@ def test_capable_backends_filters():
     assert set(names) == {"paged_kernel", "paged_gather", "reference"}
 
 
-# ------------------------------------------------------- deprecation shims
-def test_nsa_config_kernel_shim_warns_and_maps():
-    with pytest.warns(DeprecationWarning, match="kernel"):
-        cfg = NSAConfig(kernel="fsa_faithful")
-    assert cfg.policy.backend == "fsa_faithful"
+def test_nsa_config_policy_passthrough_knobs():
+    """Tuning-knob kwargs land on the policy; algorithm fields are intact."""
+    cfg = NSAConfig(block_size=16, q_block_size=32, interpret=True)
+    assert cfg.block_size == 16
+    assert cfg.q_block_size == 32 and cfg.policy.q_block_size == 32
+    assert cfg.interpret is True
 
 
-def test_nsa_config_selected_impl_shim_warns_and_maps():
-    with pytest.warns(DeprecationWarning, match="selected_impl"):
-        cfg = NSAConfig(selected_impl="gather")
-    assert cfg.policy.backend == "sparse_gather"
-    with pytest.warns(DeprecationWarning):
-        assert NSAConfig(selected_impl="union").policy.backend == \
-            "sparse_union"
-
-
-def test_nsa_config_paged_kernel_shim_warns_and_maps():
-    with pytest.warns(DeprecationWarning, match="paged_kernel"):
-        cfg = NSAConfig(paged_kernel=False)
-    assert cfg.policy.paged_backend == "paged_gather"
-    with pytest.warns(DeprecationWarning):
-        assert NSAConfig(paged_kernel=True).policy.paged_backend == \
-            "paged_kernel"
-
-
-def test_nsa_config_rejects_conflicting_old_axes():
-    """kernel= and selected_impl= were independent axes; both now map onto
-    one policy.backend slot, so passing both is an error, not a silent win."""
-    with pytest.raises(ValueError, match="both deprecated"):
-        NSAConfig(kernel="fsa", selected_impl="gather")
-
-
-def test_nsa_config_deprecated_reads_warn():
-    cfg = NSAConfig(policy=KernelPolicy(backend="fsa"))
-    with pytest.warns(DeprecationWarning):
-        assert cfg.kernel == "fsa"
-    with pytest.warns(DeprecationWarning):
-        assert cfg.paged_kernel is True
-
-
-def test_nsa_config_dict_roundtrip_with_old_spelling():
-    """The historical NSAConfig(**{**cfg.__dict__, "kernel": k}) pattern
-    still works through the shim."""
-    base = NSAConfig(block_size=16, q_block_size=32)
-    with pytest.warns(DeprecationWarning):
-        cfg = NSAConfig(**{**base.__dict__, "kernel": "nsa"})
-    assert cfg.policy.backend == "nsa" and cfg.block_size == 16
-    assert cfg.q_block_size == 32          # passthrough knob preserved
+def test_nsa_config_rejects_removed_spellings():
+    """The PR-5 deprecation shims (kernel=/selected_impl=/paged_kernel=)
+    are gone: the old kwargs now fail loudly instead of warning."""
+    with pytest.raises(TypeError):
+        NSAConfig(kernel="fsa")
+    with pytest.raises(TypeError):
+        NSAConfig(selected_impl="gather")
+    with pytest.raises(TypeError):
+        NSAConfig(paged_kernel=True)
 
 
 def test_policy_is_algorithm_invariant():
@@ -315,15 +284,6 @@ def test_policy_is_algorithm_invariant():
         outs.append(nsa_attention(p, gates, q, k, v, cfg=cfg, mode="prefill"))
     np.testing.assert_allclose(np.asarray(outs[0]), np.asarray(outs[1]),
                                atol=3e-5, rtol=3e-5)
-
-
-def test_engine_use_kernel_shim_warns():
-    from repro.configs import get_config, reduced
-    from repro.serving import Engine
-    cfg = reduced(get_config("codeqwen1.5-7b"))
-    with pytest.warns(DeprecationWarning, match="use_kernel"):
-        eng = Engine(cfg, n_slots=1, max_len=64, use_kernel=False)
-    assert eng.cfg.nsa.policy.paged_backend == "paged_gather"
 
 
 def test_legacy_impl_aliases_resolve():

@@ -292,19 +292,6 @@ def test_paged_kernel_matches_gather_reference():
                                rtol=1e-5, atol=1e-5)
 
 
-def test_paged_use_kernel_shim_warns_and_matches():
-    """The deprecated ``use_kernel=`` bool still works, warns, and maps onto
-    the paged_kernel / paged_gather registry backends."""
-    st = _rand_paged_state(seed=11)
-    new = _run_paged(st, backend="paged_kernel")
-    with pytest.warns(DeprecationWarning, match="use_kernel"):
-        old = ops.paged_decode_attention_batched(
-            st["gates"], st["q"], st["k_pages"], st["v_pages"], st["tables"],
-            st["cmp_k"], st["cmp_v"], st["pos"], st["cfg"], use_kernel=True)
-    np.testing.assert_allclose(np.asarray(old), np.asarray(new),
-                               rtol=1e-6, atol=1e-6)
-
-
 def test_page_table_permutation_invariance():
     """Physically shuffling pages (and remapping the tables accordingly)
     must not change a single logit: the kernel addresses KV only through

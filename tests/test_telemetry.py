@@ -257,3 +257,68 @@ def test_async_engine_timeline_retention_bounded():
     assert set(aeng.timelines()) == {reqs[1].rid, reqs[2].rid}
     tl = aeng.timeline(reqs[2].rid)
     assert tl["submit"] <= tl["first_token"] <= tl["finish"]
+
+
+# --------------------------------------------------------- pull endpoint
+def test_metrics_pull_endpoint_serves_engine_registry():
+    """Engine(metrics_port=0) exposes the engine's always-on registry as a
+    Prometheus /metrics endpoint on an ephemeral port."""
+    import urllib.request
+
+    import numpy as np
+
+    cfg = reduced(get_config("codeqwen1.5-7b"))
+    eng = Engine(cfg, n_slots=1, max_len=64, metrics_port=0)
+    try:
+        assert eng.metrics_server is not None
+        eng.submit(np.arange(8, dtype=np.int32), max_new=2)
+        while not eng.scheduler.idle():
+            eng.step()
+        body = urllib.request.urlopen(eng.metrics_server.url,
+                                      timeout=10).read().decode()
+        assert "engine_decoded_tokens_total" in body
+        assert "# TYPE" in body                 # Prometheus text format
+        with pytest.raises(urllib.error.HTTPError):
+            urllib.request.urlopen(
+                eng.metrics_server.url.replace("/metrics", "/nope"),
+                timeout=10)
+    finally:
+        eng.metrics_server.stop()
+
+
+def test_metrics_pull_endpoint_global_registry_late_enable():
+    """A server bound to the global registry starts serving real series the
+    moment telemetry.enable() runs (registry resolved per scrape)."""
+    import urllib.request
+
+    srv = telemetry.serve_metrics(0)
+    try:
+        before = urllib.request.urlopen(srv.url, timeout=10).read().decode()
+        assert "pull_probe_total" not in before
+        telemetry.enable()
+        telemetry.registry().counter("pull_probe_total").inc(3)
+        after = urllib.request.urlopen(srv.url, timeout=10).read().decode()
+        assert "pull_probe_total 3" in after
+    finally:
+        srv.stop()
+
+
+# ------------------------------------------------------- train-loop spans
+def test_train_loop_records_train_step_spans(tmp_path):
+    """launch.train wraps each optimizer step in a train.step span: with
+    global telemetry on, span_ms series (device-synced) must appear."""
+    from repro.launch.mesh import make_mesh
+    from repro.launch.train import train_loop
+    from repro.runtime.fault_tolerance import FTConfig
+
+    telemetry.enable()
+    cfg = reduced(get_config("mamba2-130m"))
+    mesh = make_mesh((1, 1), ("data", "model"))
+    ft = FTConfig(ckpt_dir=str(tmp_path / "ckpt"), ckpt_every=0,
+                  heartbeat_path=str(tmp_path / "hb.json"))
+    _, losses = train_loop(cfg, steps=2, batch=2, seq=32, mesh=mesh, ft=ft,
+                           quiet=True)
+    assert len(losses) == 2
+    spans = telemetry.registry().snapshot()["histograms"]["span_ms"]
+    step_span = spans['span="train.step"']
+    assert step_span["count"] == 2 and step_span["sum"] > 0
